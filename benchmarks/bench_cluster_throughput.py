@@ -1,0 +1,115 @@
+"""Paper Fig 9 + Fig 10: cluster throughput DP vs BP vs BP+Col, and the
+foreground-speedup / cluster-throughput trade-off vs static partitioning.
+
+Reproduction targets (8×A100, small global batches):
+  Fig 9: BP >= DP foreground throughput for VGG/WRN; Inception falls back to
+         ~DP; BP+Col raises total cluster throughput with <18% fg loss;
+         overall 1.2-2.3x over DP.
+  Fig 10: BP+Col operating points dominate static cluster partitions.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+from repro.configs.vgg16 import CONFIG as VCFG
+from repro.core.costmodel import A100
+from repro.core.multiplex import MultiplexConfig, MultiplexSim
+from repro.core.planner import _dp_plan, plan
+from repro.models.graph import (
+    build_inception_like_graph,
+    build_vgg_graph,
+    build_wrn_graph,
+)
+
+G = 8
+
+
+def _bg_single_gpu_time(graph) -> float:
+    """Isolated single-device iteration time of the bg job (same model,
+    small batch — paper uses the same model for fg and bg)."""
+    return _dp_plan(graph, 1, A100).total_time
+
+
+def fig9_row(name: str, graph, gb: int):
+    dp = _dp_plan(graph, G, A100)
+    bp = plan(graph, G, amp_limit=1.5, hw=A100)
+    bg_t = _bg_single_gpu_time(graph) / 4  # bg at 1/4 batch
+    mcfg = MultiplexConfig(collocate_same_device=True, bg_step_time=bg_t)
+    sim = MultiplexSim(bp, mcfg).run(30)
+
+    dp_tput = gb / dp.total_time
+    bp_tput = gb / bp.total_time
+    fg_col_tput = gb / (bp.total_time * sim.fg_slowdown)
+    bg_tput = sim.bg_steps_per_iter * (gb / 4) / sim.fg_iter_time / G  # samples/s
+    cluster_dp = dp_tput
+    cluster_col = fg_col_tput + bg_tput
+    return {
+        "name": f"fig9/{name}",
+        "us_per_call": dp.total_time * 1e6,
+        "derived": (f"DP={dp_tput:.0f} samp/s BP={bp_tput:.0f} "
+                    f"BP+Col fg={fg_col_tput:.0f} bg={bg_tput:.0f} "
+                    f"total={cluster_col:.0f} "
+                    f"gain={cluster_col / cluster_dp:.2f}x "
+                    f"fg_loss={(1 - fg_col_tput / bp_tput) * 100:.0f}%"),
+        "_gain": cluster_col / cluster_dp,
+        "_fg_loss": 1 - fg_col_tput / bp_tput,
+    }
+
+
+def fig10_rows(graph, gb: int):
+    """Operating points (fg speedup vs cluster throughput) vs partitions."""
+    bg_1gpu = gb / 4 / (_bg_single_gpu_time(graph) / 4)  # samples/s on 1 dev
+    points = []
+    for amp in (1.1, 1.5, 2.0, 3.0):
+        bp = plan(graph, G, amp_limit=amp, hw=A100)
+        bg_t = _bg_single_gpu_time(graph) / 4
+        sim = MultiplexSim(bp, MultiplexConfig(collocate_same_device=True,
+                                               bg_step_time=bg_t)).run(20)
+        fg_speedup = bp.speedup / sim.fg_slowdown
+        cluster = gb / (bp.total_time * sim.fg_slowdown) + \
+            sim.bg_steps_per_iter * (gb / 4) / sim.fg_iter_time / G
+        points.append((amp, fg_speedup, cluster))
+    partitions = []
+    for k in (1, 2, 4, 8):
+        dp = _dp_plan(graph, k, A100)
+        fg_speedup = dp.speedup
+        cluster = gb / dp.total_time + (G - k) * bg_1gpu
+        partitions.append((k, fg_speedup, cluster))
+    return points, partitions
+
+
+def run():
+    rows = []
+    workloads = {
+        "VGG16_gb32": (build_vgg_graph(VCFG, 32), 32),
+        "WRN101-2_gb16": (build_wrn_graph(16), 16),
+        "InceptionV3_gb32": (build_inception_like_graph(32), 32),
+    }
+    gains = []
+    for name, (graph, gb) in workloads.items():
+        row = fig9_row(name, graph, gb)
+        gains.append(row["_gain"])
+        rows.append({k: v for k, v in row.items() if not k.startswith("_")})
+    rows.append({
+        "name": "fig9/summary",
+        "us_per_call": 0.0,
+        "derived": f"cluster gains {min(gains):.2f}-{max(gains):.2f}x over DP "
+                   "(paper: 1.2-2.3x)",
+    })
+
+    points, partitions = fig10_rows(build_vgg_graph(VCFG, 32), 32)
+    rows.append({
+        "name": "fig10/vgg16_operating_points",
+        "us_per_call": 0.0,
+        "derived": ("BP+Col " + " ".join(
+            f"(amp={a}: {s:.1f}x,{c:.0f}samp/s)" for a, s, c in points
+        ) + " | partitions " + " ".join(
+            f"(k={k}: {s:.1f}x,{c:.0f}samp/s)" for k, s, c in partitions
+        )),
+    })
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(r["name"], "::", r["derived"])

@@ -1,0 +1,62 @@
+"""Paper Table 3: burst-parallel plan search time at 8 and 1024 devices.
+
+Paper (single-threaded Python, powers-of-two scales):
+    VGG-16:           0.01 s @ 8     0.05 s @ 1024
+    WideResNet-101-2: 0.02 s @ 8     0.11 s @ 1024
+    Inception-v3:     0.22 s @ 8     3.23 s @ 1024
+"""
+from __future__ import annotations
+
+import time
+
+from repro.configs.vgg16 import CONFIG as VCFG
+from repro.core.costmodel import A100
+from repro.core import graph_reduce
+from repro.core.planner import plan
+from repro.models.graph import (
+    build_inception_like_graph,
+    build_vgg_graph,
+    build_wrn_graph,
+)
+
+
+def _timed(graph, G, repeats=3):
+    best = float("inf")
+    for _ in range(repeats):
+        graph_reduce._TABLE_CACHE.clear()  # search must pay reduction cost
+        t0 = time.perf_counter()
+        plan(graph, G, amp_limit=2.0, hw=A100)
+        best = min(best, time.perf_counter() - t0)
+    return best
+
+
+def run():
+    rows = []
+    models = {
+        "VGG-16": lambda: build_vgg_graph(VCFG, 32),
+        "WideResNet-101-2": lambda: build_wrn_graph(16),
+        "Inception-v3-like": lambda: build_inception_like_graph(32),
+    }
+    paper = {
+        "VGG-16": (0.01, 0.05),
+        "WideResNet-101-2": (0.02, 0.11),
+        "Inception-v3-like": (0.22, 3.23),
+    }
+    for name, builder in models.items():
+        g = builder()
+        t8 = _timed(g, 8)
+        t1024 = _timed(g, 1024, repeats=1)
+        p8, p1024 = paper[name]
+        rows.append({
+            "name": f"table3/{name}",
+            "us_per_call": t1024 * 1e6,
+            "derived": (f"search@8={t8:.3f}s (paper {p8}s) "
+                        f"search@1024={t1024:.3f}s (paper {p1024}s) "
+                        f"growth={t1024 / max(t8, 1e-9):.1f}x (paper 5-15x)"),
+        })
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(r["name"], r["derived"])

@@ -1,0 +1,52 @@
+"""Quickstart: plan a burst-parallel schedule for an assigned architecture,
+inspect its gaps, simulate collocation, then run a few real train steps at
+smoke scale on the host.
+
+    PYTHONPATH=src python examples/quickstart.py [--arch llama3-8b]
+"""
+import argparse
+import dataclasses
+import sys
+
+sys.path.insert(0, "src")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="llama3-8b")
+    args = ap.parse_args()
+
+    from repro.configs import TRAIN_4K, get_config
+    from repro.core.coordinator import ClusterCoordinator, Job
+    from repro.core.multiplex import MultiplexConfig
+    from repro.launch.mesh import make_mesh
+    from repro.models.graph import build_lm_graph
+    from repro.train.loop import TrainConfig, train
+
+    cfg = get_config(args.arch)
+    print(f"=== {cfg.name}: {cfg.n_params()/1e9:.1f}B params ===\n")
+
+    # 1. burst-parallel plan for the production shape on 256 chips
+    coord = ClusterCoordinator(256)
+    plan = coord.submit_foreground(
+        Job(args.arch, "foreground", build_lm_graph(cfg, TRAIN_4K), amp_limit=2.0)
+    )
+    print(plan.summary())
+    print(f"idle gaps: {plan.idle_gpu_sec():.3f} chip-s/iter "
+          f"({100*plan.idle_gpu_sec()/(plan.total_time*256):.1f}% of the cluster)\n")
+
+    # 2. multiplex a background job into the gaps (discrete-event model)
+    res = coord.simulate_collocation(MultiplexConfig())
+    print(f"collocation: fg_slowdown={res.fg_slowdown:.3f} "
+          f"bg_steps/iter={res.bg_steps_per_iter:.1f} "
+          f"cluster_util={res.cluster_throughput:.2f}\n")
+
+    # 3. real training at smoke scale (reduced config, host devices)
+    shape = dataclasses.replace(TRAIN_4K, seq_len=64, global_batch=4)
+    report = train(cfg.reduced(), shape, make_mesh(1, 1), TrainConfig(steps=10))
+    print(f"smoke train: loss {report.losses[0]:.3f} -> {report.losses[-1]:.3f} "
+          f"({report.steps_done} steps)")
+
+
+if __name__ == "__main__":
+    main()

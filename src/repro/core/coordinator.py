@@ -1,0 +1,114 @@
+"""Cluster coordinator (paper §3.2): job registry, placement, elasticity.
+
+Manages all runtimes: places a new foreground job on the device subset its
+burst plan requests, registers background jobs per device, and handles
+cluster-size changes (device failure / elastic scale) by *re-planning* —
+elastic scaling falls out of the planner abstraction, since a BurstPlan is a
+pure function of (graph, G, amp_limit).
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Callable, Dict, List, Optional
+
+from repro.core.costmodel import Hardware
+from repro.core.multiplex import MultiplexConfig, MultiplexSim, QoSMonitor
+from repro.core.plan import BurstPlan
+from repro.core.planner import plan as make_plan
+
+
+@dataclass
+class Job:
+    name: str
+    kind: str  # 'foreground' | 'background'
+    graph: list  # LayerGraph
+    amp_limit: float = 2.0
+    plan: Optional[BurstPlan] = None
+    devices: tuple = ()
+    status: str = "pending"  # pending | running | failed | done
+    steps_done: int = 0
+
+
+@dataclass
+class ClusterEvent:
+    t: float
+    kind: str  # 'failure' | 'join' | 'replan' | 'straggler'
+    detail: str
+
+
+class ClusterCoordinator:
+    """Single source of truth for placement + plan lifecycle."""
+
+    def __init__(self, num_devices: int, hw: Optional[Hardware] = None):
+        self.num_devices = num_devices
+        self.hw = hw or Hardware()
+        self.healthy = set(range(num_devices))
+        self.jobs: Dict[str, Job] = {}
+        self.events: List[ClusterEvent] = []
+        self.monitor = QoSMonitor()
+
+    # -- job lifecycle ------------------------------------------------------
+
+    def submit_foreground(self, job: Job) -> BurstPlan:
+        job.kind = "foreground"
+        job.plan = make_plan(job.graph, self._usable_devices(), job.amp_limit, self.hw)
+        job.devices = tuple(sorted(self.healthy))
+        job.status = "running"
+        self.jobs[job.name] = job
+        return job.plan
+
+    def submit_background(self, job: Job) -> None:
+        job.kind = "background"
+        job.status = "running"
+        self.jobs[job.name] = job
+
+    def foreground(self) -> Optional[Job]:
+        for j in self.jobs.values():
+            if j.kind == "foreground" and j.status == "running":
+                return j
+        return None
+
+    def _usable_devices(self) -> int:
+        """Largest power of two that fits the healthy set (planner search
+        space is powers of two)."""
+        n, g = len(self.healthy), 1
+        while g * 2 <= n:
+            g *= 2
+        return g
+
+    # -- elasticity / fault handling ---------------------------------------
+
+    def handle_failure(self, device_id: int) -> Optional[BurstPlan]:
+        """Device loss: shrink the healthy set and re-plan the foreground
+        job onto the surviving power-of-two subset. Returns the new plan."""
+        self.healthy.discard(device_id)
+        self.events.append(ClusterEvent(time.time(), "failure", f"device {device_id}"))
+        fg = self.foreground()
+        if fg is None:
+            return None
+        fg.plan = make_plan(fg.graph, self._usable_devices(), fg.amp_limit, self.hw)
+        fg.devices = tuple(sorted(self.healthy))
+        self.events.append(
+            ClusterEvent(time.time(), "replan", f"G={fg.plan.num_gpus}")
+        )
+        return fg.plan
+
+    def handle_join(self, device_ids) -> Optional[BurstPlan]:
+        """Elastic scale-up: devices join, re-plan to exploit them."""
+        self.healthy.update(device_ids)
+        self.events.append(ClusterEvent(time.time(), "join", f"+{len(device_ids)}"))
+        fg = self.foreground()
+        if fg is None:
+            return None
+        fg.plan = make_plan(fg.graph, self._usable_devices(), fg.amp_limit, self.hw)
+        fg.devices = tuple(sorted(self.healthy))
+        return fg.plan
+
+    # -- multiplexing -------------------------------------------------------
+
+    def simulate_collocation(self, mcfg: Optional[MultiplexConfig] = None):
+        fg = self.foreground()
+        assert fg is not None and fg.plan is not None
+        sim = MultiplexSim(fg.plan, mcfg or MultiplexConfig(), monitor=self.monitor)
+        return sim.run()

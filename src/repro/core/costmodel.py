@@ -1,0 +1,110 @@
+"""Hardware + cost model (paper §4.1, re-parameterized for TPU v5e).
+
+The paper profiles comp(i,g) on A100s and models comm as payload/bandwidth +
+propagation delay over NVSwitch.  Here the same three cost terms are derived
+for a TPU v5e pod:
+
+  comp(i,g)              fwd+bwd compute time of layer i at scale g
+  comm((i,g) -> (j,h))   activation/grad resharding when scale changes
+  sync(i,g)              ring all-reduce of layer i's gradients at scale g
+
+Constants match the roofline section of the task spec: 197 TFLOP/s bf16,
+819 GB/s HBM, ~50 GB/s/link ICI with 4 links/chip (2-D torus), DCN between
+pods.  ``kernel_overhead`` plays the role of the paper's per-op launch cost
+(whose elimination via CUDA graphs the paper measures); on TPU the analogue
+is per-op dispatch/fusion boundary cost inside one XLA executable.
+
+Efficiency model: a device processing u = parallel_units/g independent work
+units runs at eff = u/(u+1) of peak (≈50% at one unit — matches the paper's
+Fig 4 utilization collapse at small per-GPU batches) with a hard cap of
+min(g, parallel_units) useful devices.
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+
+from repro.models.graph import LayerNode
+
+
+@dataclass(frozen=True)
+class Hardware:
+    name: str = "tpu-v5e"
+    peak_flops: float = 197.0e12  # bf16 per chip
+    hbm_bw: float = 819.0e9  # bytes/s per chip
+    link_bw: float = 50.0e9  # bytes/s per ICI link
+    links_per_chip: int = 4  # 2-D torus
+    prop_delay: float = 1.0e-6
+    dcn_bw: float = 25.0e9  # bytes/s per host, across pods
+    kernel_overhead: float = 2.0e-6  # per layer per pass
+
+    @property
+    def chip_bw(self) -> float:
+        return self.link_bw * self.links_per_chip
+
+
+# A100 + NVSwitch variant used by the paper-fidelity benchmarks (Fig 1/3).
+A100 = Hardware(
+    name="a100-nvswitch",
+    peak_flops=312.0e12,  # bf16 tensor core
+    hbm_bw=2.0e12,
+    link_bw=300.0e9,  # NVSwitch 600 GB/s bidirectional → 300 each way
+    links_per_chip=1,
+    prop_delay=2.0e-6,
+    kernel_overhead=5.0e-6,
+)
+
+V5E = Hardware()
+
+
+def efficiency(units_per_device: float) -> float:
+    """MXU/SM utilization vs per-device independent work units."""
+    u = max(units_per_device, 1e-9)
+    return u / (u + 1.0)
+
+
+def comp_time(node: LayerNode, g: int, hw: Hardware, bwd: bool = True) -> float:
+    """fwd(+bwd) seconds for `node` when strong-scaled to g devices."""
+    g_eff = min(g, max(node.parallel_units, 1))
+    mult = 1.0 + (node.bwd_mult if bwd else 0.0)
+    flops = node.flops * mult / g_eff
+    eff = efficiency(node.parallel_units / g_eff)
+    t_flops = flops / (hw.peak_flops * eff)
+    bytes_hbm = (node.param_bytes + 2.0 * node.act_out_bytes / g_eff) * (
+        1.5 if bwd else 1.0
+    )
+    t_mem = bytes_hbm / hw.hbm_bw
+    t_seq = node.seq_flops * mult / hw.peak_flops  # not divisible
+    passes = 2 if bwd else 1
+    return max(t_flops, t_mem) + t_seq + passes * hw.kernel_overhead
+
+
+def comm_time(act_bytes: float, g: int, h: int, hw: Hardware) -> float:
+    """Activation (and, in bwd, gradient) resharding when scale changes g→h.
+
+    Paper §4.1: payload / bandwidth + propagation delay.  Payload per device
+    is bounded by the smaller group, which must redistribute everything it
+    holds beyond what it keeps."""
+    if g == h:
+        return 0.0
+    lo, hi = min(g, h), max(g, h)
+    payload_per_dev = act_bytes * (1.0 / lo - 1.0 / hi)
+    t = payload_per_dev / hw.chip_bw + hw.prop_delay
+    return 2.0 * t  # fwd activations + bwd gradients
+
+
+def sync_time(param_bytes: float, g: int, hw: Hardware) -> float:
+    """Ring all-reduce of gradients across g data-parallel replicas
+    (not overlapped with backward, per the paper)."""
+    if g <= 1:
+        return 0.0
+    t = 2.0 * (g - 1) / g * param_bytes / hw.chip_bw
+    return t + hw.prop_delay * math.log2(g)
+
+
+def allreduce_time(bytes_total: float, n: int, hw: Hardware, bw: float = 0.0) -> float:
+    """Generic ring all-reduce estimate (used by roofline + multi-pod model)."""
+    if n <= 1:
+        return 0.0
+    bw = bw or hw.chip_bw
+    return 2.0 * (n - 1) / n * bytes_total / bw + hw.prop_delay * math.log2(n)

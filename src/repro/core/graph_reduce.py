@@ -1,0 +1,142 @@
+"""Multi-chain graph reduction (paper §4.2, Fig 7).
+
+A branch/join region (``CostedBlock``) is reduced to a single transition
+edge: for every (branching-scale g, joining-scale h) pair we plan each branch
+with its entry pinned to g and exit resharded to h, find the critical
+branch, and decide per non-critical branch whether it runs *in parallel* on
+disjoint devices (doesn't extend the block) or *sequentially* (reuses the
+critical branch's devices) — parallel only when it neither increases total
+time nor overshoots the amplification limit, per the paper.
+
+``block_transition_table`` memoizes the full (g, h) table; the linear search
+(core/planner.py) consumes it as tr((i,g)→(j,h)).
+"""
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass
+from typing import Dict, List, Sequence, Tuple
+
+from repro.core.costmodel import Hardware
+from repro.core.profiler import CostedBlock, CostedLayer
+
+INF = float("inf")
+
+
+@dataclass(frozen=True)
+class BranchPlan:
+    time: float
+    gpu_sec: float
+    peak_gpus: int
+    parallel: bool  # runs concurrently with the critical branch?
+
+
+@dataclass(frozen=True)
+class BlockTransition:
+    time: float
+    gpu_sec: float
+    branches: Tuple[BranchPlan, ...]
+
+
+def _plan_branch(
+    branch: Sequence,
+    scales: Sequence[int],
+    amp_limit: float,
+    hw: Hardware,
+    entry_scale: int,
+    exit_scale: int,
+    entry_act_bytes: float,
+) -> Tuple[float, float, int]:
+    """Best (time, gpu_sec, peak_gpus) through one branch with pinned
+    entry/exit scales (exit reshard included)."""
+    from repro.core.costmodel import comm_time
+    from repro.core.planner import _backtrace, _layer_cost, search_linear
+
+    res = search_linear(
+        branch, scales, amp_limit, hw, entry_scale=entry_scale,
+        entry_act_bytes=entry_act_bytes,
+    )
+    L = len(res.layers)
+    best = (INF, 0.0, entry_scale)
+    for g in scales:
+        t = res.S[L - 1][g] + comm_time(res.layers[-1].act_bytes, g, exit_scale, hw)
+        if t < best[0]:
+            best = (t, g, g)
+    t_best, g_final, _ = best
+    gs = _backtrace(res, g_final)
+    gpu_sec = 0.0
+    for i, (layer, g) in enumerate(zip(res.layers, gs)):
+        h = gs[i - 1] if i > 0 else entry_scale
+        gpu_sec += (res.trans[i](h, g) + _layer_cost(layer, g)) * g
+    gpu_sec += comm_time(res.layers[-1].act_bytes, g_final, exit_scale, hw) * g_final
+    return t_best, gpu_sec, max(gs)
+
+
+def _single_gpu_time(els) -> float:
+    t = 0.0
+    for el in els:
+        if isinstance(el, CostedLayer):
+            t += el.comp1
+        else:
+            for br in el.branches:
+                t += _single_gpu_time(br)
+    return t
+
+
+def block_transition(
+    block: CostedBlock,
+    g_in: int,
+    g_out: int,
+    scales: Sequence[int],
+    amp_limit: float,
+    hw: Hardware,
+    entry_act_bytes: float,
+) -> BlockTransition:
+    plans = [
+        _plan_branch(br, scales, amp_limit, hw, g_in, g_out, entry_act_bytes)
+        for br in block.branches
+    ]
+    order = sorted(range(len(plans)), key=lambda i: -plans[i][0])
+    crit = order[0]
+    total_time = plans[crit][0]
+    comp1 = max(_single_gpu_time([block]), 1e-30)
+    gpu_sec = plans[crit][1]
+    decided: List[BranchPlan] = [None] * len(plans)  # type: ignore
+    decided[crit] = BranchPlan(*plans[crit][:3], parallel=False)
+    for i in order[1:]:
+        t_i, gs_i, peak_i = plans[i]
+        # parallel = needs disjoint devices: extra gpu-sec but no extra time;
+        # allowed iff amp stays under the limit and it doesn't extend the block
+        amp_if_parallel = (gpu_sec + gs_i) / comp1
+        run_parallel = (t_i <= total_time) and (amp_if_parallel <= amp_limit)
+        if run_parallel:
+            gpu_sec += gs_i
+        else:
+            total_time += t_i
+            gpu_sec += gs_i
+        decided[i] = BranchPlan(t_i, gs_i, peak_i, parallel=run_parallel)
+    return BlockTransition(time=total_time, gpu_sec=gpu_sec, branches=tuple(decided))
+
+
+def block_transition_table(
+    block: CostedBlock,
+    scales: Sequence[int],
+    amp_limit: float,
+    hw: Hardware,
+    entry_act_bytes: float,
+) -> Dict[Tuple[int, int], Tuple[float, float]]:
+    """(g_in, g_out) -> (time, gpu_sec). Memoized per (block, params)."""
+    key = (id(block), tuple(scales), amp_limit, id(hw), entry_act_bytes)
+    cached = _TABLE_CACHE.get(key)
+    if cached is not None:
+        return cached
+    table = {}
+    for g in scales:
+        for h in scales:
+            bt = block_transition(block, g, h, scales, amp_limit, hw, entry_act_bytes)
+            table[(g, h)] = (bt.time, bt.gpu_sec)
+    _TABLE_CACHE[key] = table
+    return table
+
+
+_TABLE_CACHE: Dict = {}

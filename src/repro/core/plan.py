@@ -1,0 +1,155 @@
+"""Burst-parallel plan representation + mapping to mesh shardings.
+
+``BurstPlan`` is the planner's output: per layer, the number of devices it
+runs on, its time along the chosen path and its GPU-sec amplification.
+``stages()`` groups contiguous equal-scale layers — the unit at which the
+executor applies sharding re-maps and the multiplexer finds gaps.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+
+@dataclass(frozen=True)
+class LayerPlan:
+    index: int
+    name: str
+    gpus: int
+    time: float       # T[i][g]: comm_in + comp + sync along the chosen path
+    comp: float
+    sync: float
+    comm_in: float
+    amp: float        # GPU-sec amplification of this layer
+    kind: str = "generic"
+
+
+@dataclass(frozen=True)
+class StagePlan:
+    first: int
+    last: int
+    gpus: int
+    start: float
+    duration: float
+
+    @property
+    def n_layers(self) -> int:
+        return self.last - self.first + 1
+
+
+@dataclass(frozen=True)
+class GapWindow:
+    """Idle devices during one stage of the foreground plan."""
+
+    start: float
+    duration: float
+    free_gpus: int
+    stage_index: int
+
+
+@dataclass(frozen=True)
+class BurstPlan:
+    layers: Tuple[LayerPlan, ...]
+    num_gpus: int
+    amp_limit: float
+    single_gpu_time: float  # sum_i comp(i, 1)
+    block_details: Dict[str, object] = field(default_factory=dict)
+
+    @property
+    def total_time(self) -> float:
+        return sum(l.time for l in self.layers)
+
+    @property
+    def gpu_sec(self) -> float:
+        return sum(l.time * l.gpus for l in self.layers)
+
+    @property
+    def amplification(self) -> float:
+        return self.gpu_sec / max(self.single_gpu_time, 1e-30)
+
+    @property
+    def speedup(self) -> float:
+        """vs the same job on a single device (paper Fig 10 x-axis)."""
+        return self.single_gpu_time / max(self.total_time, 1e-30)
+
+    def stages(self) -> List[StagePlan]:
+        out: List[StagePlan] = []
+        t = 0.0
+        cur_first, cur_g, cur_t0 = 0, self.layers[0].gpus, 0.0
+        for i, l in enumerate(self.layers):
+            if l.gpus != cur_g:
+                out.append(StagePlan(cur_first, i - 1, cur_g, cur_t0, t - cur_t0))
+                cur_first, cur_g, cur_t0 = i, l.gpus, t
+            t += l.time
+        out.append(StagePlan(cur_first, len(self.layers) - 1, cur_g, cur_t0, t - cur_t0))
+        return out
+
+    def gaps(self) -> List[GapWindow]:
+        """Idle-device windows the multiplexer can fill (paper §3.1)."""
+        return [
+            GapWindow(s.start, s.duration, self.num_gpus - s.gpus, idx)
+            for idx, s in enumerate(self.stages())
+            if s.gpus < self.num_gpus and s.duration > 0.0
+        ]
+
+    def idle_gpu_sec(self) -> float:
+        return sum(g.duration * g.free_gpus for g in self.gaps())
+
+    def summary(self) -> str:
+        st = self.stages()
+        lines = [
+            f"BurstPlan G={self.num_gpus} amp_limit={self.amp_limit:g} "
+            f"iter={self.total_time*1e3:.3f} ms speedup={self.speedup:.1f}x "
+            f"amp={self.amplification:.2f} stages={len(st)}"
+        ]
+        for s in st:
+            lines.append(
+                f"  layers {s.first:>3}-{s.last:<3} g={s.gpus:<5} "
+                f"dur={s.duration*1e3:.3f} ms"
+            )
+        return "\n".join(lines)
+
+
+# ---------------------------------------------------------------------------
+# Plan -> mesh sharding re-maps (DESIGN.md §2: burst = per-stage axis re-map)
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class StageSharding:
+    """How one stage maps onto the fixed production mesh.
+
+    batch_axes: mesh axes carrying the sample dimension for this stage.
+    model_active: whether the 'model' axis does TP work in this stage; if
+    False the model axis is a *gap* the multiplexer may fill.
+    """
+
+    stage: StagePlan
+    batch_axes: Tuple[str, ...]
+    model_active: bool
+
+
+def map_plan_to_mesh(plan: BurstPlan, mesh_axes: Dict[str, int]) -> List[StageSharding]:
+    """Quantize each stage's device count onto the mesh factorization.
+
+    With a (data=Nd, model=Nm[, pod=Np]) mesh, a stage using g devices maps
+    to one of:
+      g >= Nd*Nm(*Np): full DP over all batch-capable axes  -> ('pod','data','model')
+      g >= Nd(*Np):    DP over ('pod','data'), TP over 'model'
+      else:            DP over 'data' only; 'model' (and 'pod') idle -> gap
+    """
+    nd = mesh_axes.get("data", 1)
+    nm = mesh_axes.get("model", 1)
+    np_ = mesh_axes.get("pod", 1)
+    total = nd * nm * np_
+    out = []
+    for s in plan.stages():
+        if s.gpus >= total:
+            axes = tuple(a for a in ("pod", "data", "model") if a in mesh_axes)
+            out.append(StageSharding(s, axes, model_active=True))
+        elif s.gpus >= nd * np_:
+            axes = tuple(a for a in ("pod", "data") if a in mesh_axes)
+            out.append(StageSharding(s, axes, model_active=True))
+        else:
+            out.append(StageSharding(s, ("data",), model_active=False))
+    return out

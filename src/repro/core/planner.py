@@ -1,0 +1,243 @@
+"""Burst-parallel training planner — the paper's Algorithm 1.
+
+Dynamic program over (layer, device-count) with the user-given GPU-sec
+amplification limit:
+
+    S[i][g] = shortest time to complete L_1..L_i with L_i at scale g
+    T[i][g] = time spent on L_i while minimizing S[i][g]
+    Amp(i,g) = T[i][g] · g / comp(i,1)
+
+Search space is powers of two (paper §7.4).  Branch/join blocks are reduced
+to transition-cost edges by core/graph_reduce.py (paper Fig 7) — the linear
+search below treats a CostedBlock between two layers as the paper's
+tr((i,g)→(j,h)) edge.
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+from typing import Dict, List, Optional, Sequence, Tuple
+
+from repro.core.costmodel import Hardware, comm_time
+from repro.core.plan import BurstPlan, LayerPlan
+from repro.core.profiler import CostedBlock, CostedLayer, powers_of_two
+
+INF = float("inf")
+
+
+@dataclass
+class _ChainResult:
+    """DP tables for one chain: indexed [layer][g]."""
+
+    S: List[Dict[int, float]]
+    T: List[Dict[int, float]]
+    P: List[Dict[int, Optional[int]]]  # backpointer: chosen predecessor scale
+    layers: List[CostedLayer]
+    trans: List  # trans[i](h, g) -> transition time from layer i-1@h to i@g
+
+
+def _layer_cost(layer: CostedLayer, g: int) -> float:
+    return layer.comp[g] + layer.sync[g]
+
+
+def search_linear(
+    chain: Sequence,
+    scales: Sequence[int],
+    amp_limit: float,
+    hw: Hardware,
+    entry_scale: Optional[int] = None,
+    entry_act_bytes: float = 0.0,
+) -> _ChainResult:
+    """Paper Algorithm 1 over a chain of CostedLayer/CostedBlock elements.
+
+    ``entry_scale`` fixes the scale feeding the first layer (used by the
+    graph reduction when planning a branch whose branching layer is pinned).
+    """
+    from repro.core.graph_reduce import block_transition_table  # lazy: avoids cycle
+
+    # Collapse the chain into layers + per-edge transition functions.
+    layers: List[CostedLayer] = []
+    trans: List = []
+    pending_blocks: List[CostedBlock] = []
+    prev_layer: Optional[CostedLayer] = None
+    for el in chain:
+        if isinstance(el, CostedBlock):
+            pending_blocks.append(el)
+            continue
+        blocks = tuple(pending_blocks)
+        pending_blocks = []
+        if prev_layer is None:
+            if entry_scale is None:
+                trans.append(lambda h, g: 0.0)
+            else:
+                eb = entry_act_bytes
+
+                def entry_tr(h, g, eb=eb):
+                    return comm_time(eb, h, g, hw)
+
+                trans.append(entry_tr)
+        else:
+            pb = prev_layer.act_bytes
+            if blocks:
+                tables = [
+                    block_transition_table(b, scales, amp_limit, hw, pb) for b in blocks
+                ]
+
+                def tr(h, g, tables=tables):
+                    t = 0.0
+                    cur = h
+                    for tab in tables:
+                        t += tab[(cur, g)][0]
+                        cur = g
+                    return t
+
+                trans.append(tr)
+            else:
+
+                def tr(h, g, pb=pb):
+                    return comm_time(pb, h, g, hw)
+
+                trans.append(tr)
+        layers.append(el)
+        prev_layer = el
+    if pending_blocks:
+        raise ValueError("chain must not end with a ParallelBlock")
+
+    L = len(layers)
+    S: List[Dict[int, float]] = [dict() for _ in range(L)]
+    T: List[Dict[int, float]] = [dict() for _ in range(L)]
+    P: List[Dict[int, Optional[int]]] = [dict() for _ in range(L)]
+
+    def amp(i: int, g: int) -> float:
+        return T[i][g] * g / max(layers[i].comp1, 1e-30)
+
+    for i in range(L):
+        for g in scales:
+            if i == 0:
+                src_scales = [entry_scale] if entry_scale is not None else [g]
+                best_s, best_t, best_h = INF, INF, None
+                for h in src_scales:
+                    c = trans[0](h, g)
+                    if c < best_s:
+                        best_s, best_t, best_h = c, c, h
+            else:
+                best_amp, best_s, best_t, best_h = INF, INF, INF, None
+                for h in scales:
+                    a_prev = amp(i - 1, h)
+                    if a_prev <= max(best_amp, amp_limit) and (
+                        S[i - 1][h] + trans[i](h, g) <= best_s
+                    ):
+                        best_s = S[i - 1][h] + trans[i](h, g)
+                        best_t = trans[i](h, g)
+                        best_amp = min(best_amp, a_prev)
+                        best_h = h
+            S[i][g] = best_s + _layer_cost(layers[i], g)
+            T[i][g] = best_t + _layer_cost(layers[i], g)
+            P[i][g] = best_h
+
+    return _ChainResult(S=S, T=T, P=P, layers=layers, trans=trans)
+
+
+def _backtrace(res: _ChainResult, final_g: int) -> List[int]:
+    gs = [final_g]
+    for i in range(len(res.layers) - 1, 0, -1):
+        gs.append(res.P[i][gs[-1]])
+    gs.reverse()
+    return gs
+
+
+def plan(
+    graph,
+    num_gpus: int,
+    amp_limit: float = 2.0,
+    hw: Optional[Hardware] = None,
+) -> BurstPlan:
+    """Plan a LayerGraph (models/graph.py) or pre-costed chain."""
+    from repro.core.profiler import profile_graph
+    from repro.models.graph import LayerNode, ParallelBlock
+
+    hw = hw or Hardware()
+    if graph and isinstance(graph[0], (LayerNode, ParallelBlock)):
+        chain = profile_graph(graph, num_gpus, hw)
+    else:
+        chain = list(graph)
+    scales = powers_of_two(num_gpus)
+    res = search_linear(chain, scales, amp_limit, hw)
+    L = len(res.layers)
+
+    def amp(i, g):
+        return res.T[i][g] * g / max(res.layers[i].comp1, 1e-30)
+
+    feasible = [g for g in scales if amp(L - 1, g) <= amp_limit]
+    pool = feasible if feasible else scales
+    final_g = min(pool, key=lambda g: res.S[L - 1][g])
+    gs = _backtrace(res, final_g)
+
+    layer_plans = []
+    for i, (layer, g) in enumerate(zip(res.layers, gs)):
+        h = gs[i - 1] if i > 0 else (g if res.P[0][g] is None else res.P[0][g])
+        comm_in = res.trans[i](h, g)
+        layer_plans.append(
+            LayerPlan(
+                index=i,
+                name=layer.name,
+                gpus=g,
+                time=comm_in + _layer_cost(layer, g),
+                comp=layer.comp[g],
+                sync=layer.sync[g],
+                comm_in=comm_in,
+                amp=amp(i, g),
+                kind=layer.kind,
+            )
+        )
+    single = sum(l.comp1 for l in res.layers)
+    return BurstPlan(
+        layers=tuple(layer_plans),
+        num_gpus=num_gpus,
+        amp_limit=amp_limit,
+        single_gpu_time=single,
+    )
+
+
+def plan_data_parallel(graph, num_gpus: int, hw: Optional[Hardware] = None) -> BurstPlan:
+    """The paper's 'DP' baseline: every layer at full scale."""
+    return plan(graph, num_gpus, amp_limit=INF if num_gpus == 1 else 1e30, hw=hw) \
+        if False else _dp_plan(graph, num_gpus, hw)
+
+
+def _dp_plan(graph, num_gpus: int, hw: Optional[Hardware]) -> BurstPlan:
+    from repro.core.profiler import profile_graph
+    from repro.models.graph import LayerNode, ParallelBlock
+
+    hw = hw or Hardware()
+    if graph and isinstance(graph[0], (LayerNode, ParallelBlock)):
+        chain = profile_graph(graph, num_gpus, hw)
+    else:
+        chain = list(graph)
+    # flatten blocks: DP runs branches sequentially at full scale
+    flat: List[CostedLayer] = []
+
+    def _flat(els):
+        for el in els:
+            if isinstance(el, CostedLayer):
+                flat.append(el)
+            else:
+                for br in el.branches:
+                    _flat(br)
+
+    _flat(chain)
+    g = num_gpus
+    plans = [
+        LayerPlan(
+            index=i, name=l.name, gpus=g, time=_layer_cost(l, g), comp=l.comp[g],
+            sync=l.sync[g], comm_in=0.0, amp=_layer_cost(l, g) * g / max(l.comp1, 1e-30),
+            kind=l.kind,
+        )
+        for i, l in enumerate(flat)
+    ]
+    return BurstPlan(
+        layers=tuple(plans),
+        num_gpus=g,
+        amp_limit=INF,
+        single_gpu_time=sum(l.comp1 for l in flat),
+    )

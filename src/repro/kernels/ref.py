@@ -1,0 +1,97 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose ground truth).
+
+These are deliberately naive — full softmax materialization, per-timestep
+sequential recurrences — so the tests compare two *independent*
+formulations (naive vs chunked/blocked).
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+
+def attention_reference(
+    q: jax.Array,  # (B, Sq, H, d)
+    k: jax.Array,  # (B, Skv, KV, d)
+    v: jax.Array,
+    *,
+    causal: bool = True,
+    window: int = 0,
+) -> jax.Array:
+    B, Sq, H, d = q.shape
+    KV = k.shape[2]
+    G = H // KV
+    kr = jnp.repeat(k, G, axis=2).astype(jnp.float32)
+    vr = jnp.repeat(v, G, axis=2).astype(jnp.float32)
+    qf = q.astype(jnp.float32) / math.sqrt(d)
+    s = jnp.einsum("bshd,bthd->bhst", qf, kr)
+    q_pos = jnp.arange(Sq)[:, None]
+    k_pos = jnp.arange(k.shape[1])[None, :]
+    ok = jnp.ones((Sq, k.shape[1]), bool)
+    if causal:
+        ok &= k_pos <= q_pos
+    if window > 0:
+        ok &= k_pos > q_pos - window
+    s = jnp.where(ok[None, None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhst,bthd->bshd", p, vr)
+    return o.astype(q.dtype)
+
+
+def ssd_reference(
+    x: jax.Array,  # (B, S, H, P)
+    dt: jax.Array,  # (B, S, H)
+    A: jax.Array,  # (H,)
+    Bm: jax.Array,  # (B, S, N)
+    Cm: jax.Array,  # (B, S, N)
+) -> jax.Array:
+    """Sequential SSM recurrence: h_t = exp(dt_t A) h_{t-1} + dt_t B_t x_t."""
+    B, S, H, P = x.shape
+    N = Bm.shape[-1]
+    f32 = jnp.float32
+    xb = x.astype(f32) * dt.astype(f32)[..., None]  # (B,S,H,P)
+    dec = jnp.exp(dt.astype(f32) * A.astype(f32)[None, None, :])  # (B,S,H)
+
+    def step(h, inp):
+        xb_t, dec_t, b_t, c_t = inp  # (B,H,P), (B,H), (B,N), (B,N)
+        h = h * dec_t[..., None, None] + jnp.einsum("bhp,bn->bhpn", xb_t, b_t)
+        y = jnp.einsum("bhpn,bn->bhp", h, c_t)
+        return h, y
+
+    h0 = jnp.zeros((B, H, P, N), f32)
+    xs = (
+        jnp.moveaxis(xb, 1, 0),
+        jnp.moveaxis(dec, 1, 0),
+        jnp.moveaxis(Bm.astype(f32), 1, 0),
+        jnp.moveaxis(Cm.astype(f32), 1, 0),
+    )
+    _, ys = jax.lax.scan(step, h0, xs)
+    return jnp.moveaxis(ys, 0, 1).astype(x.dtype)
+
+
+def wkv6_reference(
+    r: jax.Array,  # (B, S, H, K)
+    k: jax.Array,
+    v: jax.Array,  # (B, S, H, V)
+    w: jax.Array,  # (B, S, H, K)
+    u: jax.Array,  # (H, K)
+) -> jax.Array:
+    """Sequential WKV-6: o_t = r_t·(S_{t-1} + diag(u) k_t⊗v_t);
+    S_t = diag(w_t) S_{t-1} + k_t⊗v_t."""
+    B, S, H, K = r.shape
+    V = v.shape[-1]
+    f32 = jnp.float32
+
+    def step(s, inp):
+        r_t, k_t, v_t, w_t = (a.astype(f32) for a in inp)  # (B,H,*)
+        kv = jnp.einsum("bhk,bhv->bhkv", k_t, v_t)
+        o = jnp.einsum("bhk,bhkv->bhv", r_t, s + u.astype(f32)[None, :, :, None] * kv)
+        s = s * w_t[..., None] + kv
+        return s, o
+
+    s0 = jnp.zeros((B, H, K, V), f32)
+    xs = tuple(jnp.moveaxis(a, 1, 0) for a in (r, k, v, w))
+    _, os = jax.lax.scan(step, s0, xs)
+    return jnp.moveaxis(os, 0, 1).astype(r.dtype)

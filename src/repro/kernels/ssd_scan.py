@@ -1,0 +1,112 @@
+"""Pallas TPU kernel for the Mamba-2 SSD chunked scan.
+
+One grid step processes one (batch, head, chunk) cell: the intra-chunk
+decay-weighted attention-like matmuls run on the MXU, while the inter-chunk
+state recurrence is carried in a VMEM scratch accumulator across the
+sequential chunk dimension (innermost grid dim, 'arbitrary' semantics).
+This is the TPU-native replacement for the paper-era CUDA selective scan:
+chunking converts the sequential recurrence into dense matmuls
+(DESIGN.md §2, §6).
+
+Layouts (chunk L, head dim P, state N — L,P multiples of 8/128 as needed):
+  x  (B, nc, L, H, P)   dt (B, nc, L, H)   A (H,)
+  Bm (B, nc, L, N)      Cm (B, nc, L, N)
+  y  (B, nc, L, H, P)
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _ssd_kernel(a_ref, x_ref, dt_ref, b_ref, c_ref, y_ref, state_ref, *, chunk):
+    c_idx = pl.program_id(2)
+
+    @pl.when(c_idx == 0)
+    def _init():
+        state_ref[...] = jnp.zeros_like(state_ref)
+
+    A = a_ref[0]  # scalar decay rate for this head
+    dt = dt_ref[0, 0, :, 0].astype(jnp.float32)  # (L,)
+    x = x_ref[0, 0, :, 0].astype(jnp.float32)  # (L, P)
+    Bm = b_ref[0, 0].astype(jnp.float32)  # (L, N)
+    Cm = c_ref[0, 0].astype(jnp.float32)  # (L, N)
+
+    dA = dt * A  # (L,) log-decay per step
+    cum = jnp.cumsum(dA)  # inclusive
+    xb = x * dt[:, None]
+
+    # intra-chunk: Y = (C B^T ⊙ L) X̄ ; L[i,j] = exp(cum_i - cum_j), j <= i
+    seg = cum[:, None] - cum[None, :]
+    mask = (
+        jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 0)
+        >= jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 1)
+    )
+    L = jnp.where(mask, jnp.exp(seg), 0.0)
+    CB = jax.lax.dot_general(
+        Cm, Bm, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+    )
+    y = jax.lax.dot_general(
+        CB * L, xb, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+    )
+
+    # off-diagonal: Y += exp(cum) ⊙ (C · state)   (state: (N, P))
+    y = y + jnp.exp(cum)[:, None] * jax.lax.dot_general(
+        Cm, state_ref[...], (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )
+    y_ref[0, 0, :, 0] = y.astype(y_ref.dtype)
+
+    # state update: S' = exp(cum_L) S + (B ⊙ exp(cum_L - cum))^T X̄
+    decay_to_end = jnp.exp(cum[-1] - cum)
+    state_ref[...] = state_ref[...] * jnp.exp(cum[-1]) + jax.lax.dot_general(
+        Bm * decay_to_end[:, None], xb, (((0,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def ssd_scan(
+    x: jax.Array,  # (B, S, H, P)
+    dt: jax.Array,  # (B, S, H) fp32 step sizes
+    A: jax.Array,  # (H,) negative decay rates
+    Bm: jax.Array,  # (B, S, N)
+    Cm: jax.Array,  # (B, S, N)
+    *,
+    chunk: int = 128,
+    interpret: bool = False,
+) -> jax.Array:
+    B, S, H, P = x.shape
+    N = Bm.shape[-1]
+    assert S % chunk == 0, (S, chunk)
+    nc = S // chunk
+
+    xr = x.reshape(B, nc, chunk, H, P)
+    dtr = dt.reshape(B, nc, chunk, H)
+    br = Bm.reshape(B, nc, chunk, N)
+    cr = Cm.reshape(B, nc, chunk, N)
+
+    grid = (B, H, nc)
+    out = pl.pallas_call(
+        functools.partial(_ssd_kernel, chunk=chunk),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1,), lambda b, h, c: (h,)),
+            pl.BlockSpec((1, 1, chunk, 1, P), lambda b, h, c: (b, c, 0, h, 0)),
+            pl.BlockSpec((1, 1, chunk, 1), lambda b, h, c: (b, c, 0, h)),
+            pl.BlockSpec((1, 1, chunk, N), lambda b, h, c: (b, c, 0, 0)),
+            pl.BlockSpec((1, 1, chunk, N), lambda b, h, c: (b, c, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, chunk, 1, P), lambda b, h, c: (b, c, 0, h, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, nc, chunk, H, P), x.dtype),
+        scratch_shapes=[pltpu.VMEM((N, P), jnp.float32)],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary"),
+        ),
+        interpret=interpret,
+    )(A.astype(jnp.float32), xr, dtr, br, cr)
+    return out.reshape(B, S, H, P)

@@ -1,0 +1,110 @@
+"""Pallas TPU kernel for the RWKV-6 WKV recurrence (chunked parallel form).
+
+Same chunking structure as the SSD kernel: per-(batch, head) the sequential
+chunk dimension is the innermost grid axis; the (K, V) state matrix is a
+VMEM scratch carried across chunks; intra-chunk work is dense MXU matmuls
+with per-channel data-dependent decays.
+
+Layouts (chunk L, key dim K, value dim V):
+  r/k/w (B, nc, L, H, K)   v (B, nc, L, H, V)   u (H, K)
+  o     (B, nc, L, H, V)
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _wkv6_kernel(u_ref, r_ref, k_ref, v_ref, w_ref, o_ref, state_ref, *, chunk):
+    c_idx = pl.program_id(2)
+
+    @pl.when(c_idx == 0)
+    def _init():
+        state_ref[...] = jnp.zeros_like(state_ref)
+
+    r = r_ref[0, 0, :, 0].astype(jnp.float32)  # (L, K)
+    k = k_ref[0, 0, :, 0].astype(jnp.float32)
+    v = v_ref[0, 0, :, 0].astype(jnp.float32)  # (L, V)
+    w = w_ref[0, 0, :, 0].astype(jnp.float32)  # (L, K) decays in (0,1)
+    u = u_ref[0].astype(jnp.float32)  # (K,)
+
+    lw = jnp.log(jnp.clip(w, 1e-6, 1.0))
+    cs = jnp.cumsum(lw, axis=0)  # (L, K) inclusive
+
+    r_dec = r * jnp.exp(cs - lw)  # r_t ⊙ exp(cs_{t-1})
+    k_dec = k * jnp.exp(-cs)  # k_j ⊙ exp(-cs_j)
+
+    A = jax.lax.dot_general(
+        r_dec, k_dec, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+    )  # (L, L)
+    strict = (
+        jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 0)
+        > jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 1)
+    )
+    A = jnp.where(strict, A, 0.0)
+    diag = jnp.sum(r * u[None, :] * k, axis=1)  # (L,)
+
+    o = jax.lax.dot_general(
+        A, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+    )
+    o = o + diag[:, None] * v
+    # inter-chunk: o += (r ⊙ exp(cs_{t-1})) · state   (state: (K, V))
+    o = o + jax.lax.dot_general(
+        r_dec, state_ref[...], (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )
+    o_ref[0, 0, :, 0] = o.astype(o_ref.dtype)
+
+    # state' = diag(exp(cs_L)) state + (k ⊙ exp(cs_L - cs))^T v
+    k_tail = k * jnp.exp(cs[-1][None, :] - cs)
+    state_ref[...] = state_ref[...] * jnp.exp(cs[-1])[:, None] + jax.lax.dot_general(
+        k_tail, v, (((0,), (0,)), ((), ())), preferred_element_type=jnp.float32
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def wkv6(
+    r: jax.Array,  # (B, S, H, K)
+    k: jax.Array,
+    v: jax.Array,  # (B, S, H, V)
+    w: jax.Array,  # (B, S, H, K) decays in (0,1)
+    u: jax.Array,  # (H, K)
+    *,
+    chunk: int = 64,
+    interpret: bool = False,
+) -> jax.Array:
+    B, S, H, K = r.shape
+    V = v.shape[-1]
+    assert S % chunk == 0, (S, chunk)
+    nc = S // chunk
+
+    def re(a, last):
+        return a.reshape(B, nc, chunk, H, last)
+
+    grid = (B, H, nc)
+    io_spec = lambda last: pl.BlockSpec(
+        (1, 1, chunk, 1, last), lambda b, h, c: (b, c, 0, h, 0)
+    )
+    out = pl.pallas_call(
+        functools.partial(_wkv6_kernel, chunk=chunk),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, K), lambda b, h, c: (h, 0)),
+            io_spec(K),
+            io_spec(K),
+            io_spec(V),
+            io_spec(K),
+        ],
+        out_specs=io_spec(V),
+        out_shape=jax.ShapeDtypeStruct((B, nc, chunk, H, V), r.dtype),
+        scratch_shapes=[pltpu.VMEM((K, V), jnp.float32)],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary"),
+        ),
+        interpret=interpret,
+    )(u, re(r, K), re(k, K), re(v, V), re(w, K))
+    return out.reshape(B, S, H, V)

@@ -1,0 +1,243 @@
+"""HLO text analysis: trip-aware FLOPs / bytes / collective traffic.
+
+``compiled.cost_analysis()`` counts each while-loop body ONCE — with
+scan-over-layers that understates FLOPs by ~num_layers×.  This module parses
+the post-SPMD HLO text instead:
+
+  - every computation gets a *multiplier* = sum over call-chains of
+    while-loop trip counts (``known_trip_count`` annotation when present,
+    caller-supplied default otherwise — the dry-run passes num_layers);
+  - ``dot`` op FLOPs     = 2 × |result| × |contracting dims|  (per device)
+  - result-buffer bytes  ≈ bytes written (×2 ≈ bytes accessed)
+  - collective operand bytes per kind (all-gather / all-reduce /
+    reduce-scatter / all-to-all / collective-permute)
+
+Shapes in post-SPMD HLO are per-device, so all outputs are per-device per
+step; the roofline multiplies by chip count per its formulas.
+"""
+from __future__ import annotations
+
+import math
+import re
+from collections import defaultdict
+from typing import Dict, Optional, Tuple
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "f8e4m3fn": 1, "f8e5m2": 1, "f8e4m3": 1,
+    "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4,
+    "s64": 8, "u64": 8, "f64": 8, "c64": 8, "c128": 16,
+}
+
+_SHAPE_RE = re.compile(r"\b([a-z]+[0-9]+(?:e[0-9]+m[0-9]+(?:fn)?)?|pred)\[([0-9,]*)\]")
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+_COMP_HDR = re.compile(r"^(?:ENTRY\s+)?%?([\w.\-]+)\s*\(.*\)\s*->")
+_WHILE_BODY = re.compile(r"body=%?([\w.\-]+)")
+_WHILE_COND = re.compile(r"condition=%?([\w.\-]+)")
+_CALLS = re.compile(r"(?:to_apply|calls)=%?([\w.\-]+)")
+_BRANCHES = re.compile(r"branch_computations=\{([^}]*)\}")
+_TRIP = re.compile(r'"known_trip_count":\{"n":"?(\d+)"?\}')
+_DOT_RE = re.compile(r"=\s*([a-z0-9]+\[[0-9,]*\])\{?[^=]*?\bdot\(\s*%?([\w.\-]+)")
+_LHS_CONTRACT = re.compile(r"lhs_contracting_dims=\{([0-9,]*)\}")
+_DEF_RE = re.compile(r"^(?:ROOT\s+)?%([\w.\-]+)\s*=\s*(\(?[a-z0-9]+\[[0-9,]*\])")
+_OPERAND_NAMES = re.compile(r"%([\w.\-]+)")
+
+
+def _dims(shape_txt: str):
+    m = _SHAPE_RE.search(shape_txt)
+    if not m:
+        return None, []
+    dt = m.group(1)
+    dims = [int(d) for d in m.group(2).split(",")] if m.group(2) else []
+    return dt, dims
+
+
+def _nbytes(shape_txt: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(shape_txt):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in (dims.split(",") if dims else []):
+            n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+class HloCosts:
+    def __init__(self):
+        self.dot_flops = 0.0
+        self.bytes_written = 0.0
+        self.collectives: Dict[str, float] = defaultdict(float)
+        self.diag: Dict[str, int] = {}
+
+    @property
+    def collective_bytes(self) -> float:
+        return float(sum(self.collectives.values()))
+
+
+_CONST_RE = re.compile(r"constant\((\d+)\)")
+_ALIAS_OP = re.compile(
+    r"\b(?:tuple|get-tuple-element|bitcast|bitcast-convert|parameter|constant|"
+    r"while|conditional|after-all|iota)\(")
+
+
+def analyze_hlo(hlo_text: str, default_trip_count: int = 1) -> HloCosts:
+    lines = hlo_text.splitlines()
+
+    # --- pass 1: computations, call edges, while ops, per-comp constants
+    comp_of_line: Dict[int, str] = {}
+    current = "<module>"
+    called_by: Dict[str, list] = defaultdict(list)  # callee -> [(caller, mult)]
+    fusion_comps: set = set()
+    const_max: Dict[str, int] = defaultdict(int)  # comp -> max int constant
+    whiles: list = []  # (caller_comp, body, cond, known_trip)
+    n_while = 0
+    for i, line in enumerate(lines):
+        st = line.strip()
+        if st.endswith("{") and ("->" in st) and not st.startswith(("%constant", "ROOT")):
+            hdr = _COMP_HDR.match(st)
+            if hdr:
+                current = hdr.group(1)
+        comp_of_line[i] = current
+        for m in _CONST_RE.finditer(st):
+            const_max[current] = max(const_max[current], int(m.group(1)))
+        if " while(" in st:
+            n_while += 1
+            trip = None
+            mt = _TRIP.search(st)
+            if mt:
+                trip = int(mt.group(1))
+            body = cond = None
+            mb = _WHILE_BODY.search(st)
+            mc = _WHILE_COND.search(st)
+            if mb:
+                body = mb.group(1)
+            if mc:
+                cond = mc.group(1)
+            whiles.append((current, body, cond, trip))
+        else:
+            for m in _CALLS.finditer(st):
+                called_by[m.group(1)].append((current, 1))
+                fusion_comps.add(m.group(1))  # fusion/reduction bodies: ops
+                # stay in registers/VMEM — not HBM traffic
+            mb = _BRANCHES.search(st)
+            if mb:
+                for name in mb.group(1).split(","):
+                    called_by[name.strip().lstrip("%")].append((current, 1))
+
+    # resolve trip counts: known_trip_count > condition-bound constant > default
+    for caller, body, cond, trip in whiles:
+        if trip is None and cond is not None and const_max.get(cond, 0) >= 2:
+            trip = const_max[cond]
+        t = trip if trip else default_trip_count
+        if body:
+            called_by[body].append((caller, t))
+        if cond:
+            called_by[cond].append((caller, t))
+
+    memo: Dict[str, float] = {}
+
+    def mult(comp: str, depth: int = 0) -> float:
+        if comp in memo:
+            return memo[comp]
+        if depth > 64:
+            return 1.0
+        callers = called_by.get(comp)
+        if not callers:
+            memo[comp] = 1.0
+            return 1.0
+        memo[comp] = 0.0  # cycle guard
+        total = 0.0
+        for caller, m in callers:
+            if caller == comp:
+                continue
+            total += m * mult(caller, depth + 1)
+        memo[comp] = total if total > 0 else 1.0
+        return memo[comp]
+
+    # --- pass 1.5: symbol table (op name -> first shape dims + bytes)
+    sym_dims: Dict[str, list] = {}
+    sym_bytes: Dict[str, int] = {}
+    for line in lines:
+        st = line.strip()
+        md = _DEF_RE.match(st)
+        if md:
+            name, shp = md.group(1), md.group(2)
+            _, dims = _dims(shp)
+            sym_dims[name] = dims
+            sym_bytes[name] = _nbytes(shp)
+
+    # --- pass 2: per-op costs × multiplier
+    out = HloCosts()
+    n_dots = 0
+    n_coll = 0
+    for i, line in enumerate(lines):
+        st = line.strip()
+        if not (st.startswith("%") or st.startswith("ROOT")):
+            continue
+        k = mult(comp_of_line[i])
+
+        md = _DOT_RE.search(st)
+        if md:
+            _, rdims = _dims(md.group(1))
+            ldims = sym_dims.get(md.group(2), [])
+            mc = _LHS_CONTRACT.search(st)
+            contract = 1
+            if mc and mc.group(1):
+                for ci in mc.group(1).split(","):
+                    ci = int(ci)
+                    if ci < len(ldims):
+                        contract *= ldims[ci]
+            res = 1
+            for d in rdims:
+                res *= d
+            out.dot_flops += 2.0 * res * contract * k
+            n_dots += 1
+
+        # result bytes (bytes written) — top-level/while/branch ops only;
+        # fusion-internal results never touch HBM, and alias/metadata ops
+        # (tuple plumbing, bitcasts, parameters, the while carry itself)
+        # move no bytes
+        if comp_of_line[i] not in fusion_comps and not _ALIAS_OP.search(st):
+            eq = st.find("= ")
+            if eq > 0:
+                head = st[eq + 2:]
+                par = head.find("(")
+                out.bytes_written += _nbytes(head[: par if par > 0 else len(head)]) * k
+
+        for kind in _COLLECTIVES:
+            if re.search(r"\b%s(?:-start)?[\w.\-]*\(" % kind, st):
+                if f"{kind}-done" in st:
+                    break
+                m = re.search(
+                    r"(?:%s)(?:-start)?[\w.\-]*\(([^)]*)\)" % kind, st
+                )
+                b = 0
+                if m:
+                    # operand bytes via symbol table (no inline types in HLO)
+                    for opname in _OPERAND_NAMES.findall(m.group(1)):
+                        b += sym_bytes.get(opname, 0)
+                    if b == 0:
+                        b = _nbytes(m.group(1))
+                if b == 0:
+                    # fall back to result bytes
+                    mr = _DEF_RE.match(st)
+                    if mr:
+                        b = sym_bytes.get(mr.group(1), 0)
+                if b:
+                    out.collectives[kind] += b * k
+                    n_coll += 1
+                break
+
+    out.diag = {"n_dots": n_dots, "n_collective_ops": n_coll, "n_while": n_while}
+    return out
+
+
+def analyze_collectives(
+    hlo_text: str, default_trip_count: int = 1
+) -> Tuple[Dict[str, float], Dict[str, int]]:
+    """Back-compat wrapper: ({kind: per-device bytes}, diagnostics)."""
+    c = analyze_hlo(hlo_text, default_trip_count)
+    return dict(c.collectives), c.diag

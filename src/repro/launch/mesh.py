@@ -1,0 +1,42 @@
+"""Production mesh builders.
+
+``make_production_mesh`` is a FUNCTION (never a module-level constant) so
+importing this module never touches jax device state.  The dry-run sets
+XLA_FLAGS=--xla_force_host_platform_device_count=512 before any jax import;
+smoke tests and benches see the real (1-device) platform.
+"""
+from __future__ import annotations
+
+import jax
+import numpy as np
+from jax.sharding import Mesh
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_mesh(data: int, model: int, pod: int = 1):
+    """Arbitrary mesh (tests / small-scale demos on host devices)."""
+    if pod > 1:
+        return jax.make_mesh((pod, data, model), ("pod", "data", "model"))
+    return jax.make_mesh((data, model), ("data", "model"))
+
+
+def largest_pow2_mesh(n_devices: int):
+    """Elastic re-mesh: biggest power-of-two (data, model) mesh that fits
+    n_devices, favoring the data axis 4:1 (used after failures)."""
+    g = 1
+    while g * 2 <= n_devices:
+        g *= 2
+    model = 1
+    while model * model * 4 <= g:
+        model *= 2
+    data = g // model
+    return make_mesh(data, model)
+
+
+def mesh_axis_sizes(mesh: Mesh) -> dict:
+    return dict(zip(mesh.axis_names, mesh.devices.shape))

@@ -1,0 +1,2 @@
+"""Model zoo: pure-functional JAX models for every assigned architecture."""
+from repro.models.api import ModelAPI, get_model, input_specs, make_batch  # noqa: F401

@@ -1,0 +1,170 @@
+"""Model facade: one uniform API over every architecture family.
+
+``get_model(cfg)`` returns a ``ModelAPI`` whose members are pure functions of
+(params, inputs).  ``input_specs`` produces ShapeDtypeStruct stand-ins for
+every model input of a given benchmark shape — weak-type-correct, shardable,
+zero allocation — which is what launch/dryrun.py lowers against.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.models import encdec, hybrid, rwkv_lm, transformer
+from repro.models.graph import build_lm_graph
+from repro.models.layers import abstract_params, init_params, logical_axes
+
+I32 = jnp.int32
+
+
+@dataclass(frozen=True)
+class ModelAPI:
+    cfg: ModelConfig
+    schema: Any
+    loss: Callable  # (params, batch) -> (loss, metrics)
+    forward: Callable  # (params, *inputs) -> logits
+    decode_step: Optional[Callable]  # (params, token, cache, cache_len) -> (logits, cache)
+    cache_schema: Optional[Callable]  # (batch, capacity) -> schema
+    prefill: Optional[Callable] = None
+
+    def init(self, rng: jax.Array):
+        return init_params(rng, self.schema)
+
+    def abstract(self):
+        return abstract_params(self.schema)
+
+    def axes(self):
+        return logical_axes(self.schema)
+
+    def layer_graph(self, shape: ShapeConfig):
+        return build_lm_graph(self.cfg, shape)
+
+
+def get_model(cfg: ModelConfig) -> ModelAPI:
+    if cfg.block_type in ("attn_mlp", "moe") and not cfg.num_encoder_layers:
+        return ModelAPI(
+            cfg=cfg,
+            schema=transformer.lm_schema(cfg),
+            loss=lambda p, b: transformer.loss_fn(p, b, cfg),
+            forward=lambda p, t, **kw: transformer.forward(p, t, cfg, **kw),
+            prefill=lambda p, t, cap, **kw: transformer.prefill(p, t, cfg, cap, **kw),
+            decode_step=lambda p, tok, cache, n: transformer.decode_step(p, tok, cache, n, cfg),
+            cache_schema=lambda b, cap: transformer.cache_schema(cfg, b, cap),
+        )
+    if cfg.num_encoder_layers:
+        return ModelAPI(
+            cfg=cfg,
+            schema=encdec.encdec_schema(cfg),
+            loss=lambda p, b: encdec.loss_fn(p, b, cfg),
+            forward=lambda p, frames, tokens: encdec.forward(p, frames, tokens, cfg),
+            decode_step=lambda p, tok, cache, n: encdec.decode_step(p, tok, cache, n, cfg),
+            cache_schema=lambda b, cap: encdec.cache_schema(cfg, b, cap),
+        )
+    if cfg.block_type == "mamba2":
+        return ModelAPI(
+            cfg=cfg,
+            schema=hybrid.hybrid_schema(cfg),
+            loss=lambda p, b: hybrid.loss_fn(p, b, cfg),
+            forward=lambda p, t: hybrid.forward(p, t, cfg),
+            decode_step=lambda p, tok, cache, n: hybrid.decode_step(p, tok, cache, n, cfg),
+            cache_schema=lambda b, cap: hybrid.cache_schema(cfg, b, cap),
+        )
+    if cfg.block_type == "rwkv6":
+        return ModelAPI(
+            cfg=cfg,
+            schema=rwkv_lm.rwkv_lm_schema(cfg),
+            loss=lambda p, b: rwkv_lm.loss_fn(p, b, cfg),
+            forward=lambda p, t: rwkv_lm.forward(p, t, cfg),
+            decode_step=lambda p, tok, cache, n: rwkv_lm.decode_step(p, tok, cache, n, cfg),
+            cache_schema=lambda b, cap: rwkv_lm.cache_schema(cfg, b, cap),
+        )
+    raise ValueError(f"no model for {cfg.name} ({cfg.block_type})")
+
+
+# ---------------------------------------------------------------------------
+# Input specs (dry-run) + concrete batches (smoke tests / examples)
+# ---------------------------------------------------------------------------
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(tuple(shape), jnp.dtype(dtype))
+
+
+def train_input_specs(cfg: ModelConfig, shape: ShapeConfig) -> dict:
+    """ShapeDtypeStructs for one ``loss``-mode batch."""
+    B, S = shape.global_batch, shape.seq_len
+    if cfg.num_encoder_layers:  # enc-dec: frames in, tokens out
+        S_dec = max(S // encdec.DEC_RATIO, 16)
+        return {
+            "frames": _sds((B, S, cfg.d_model), cfg.dtype),
+            "tokens": _sds((B, S_dec), I32),
+            "labels": _sds((B, S_dec), I32),
+        }
+    if cfg.frontend == "vision":
+        S_img = min(transformer.VISION_PREFIX, S // 4)
+        S_txt = S - S_img
+        return {
+            "tokens": _sds((B, S_txt), I32),
+            "labels": _sds((B, S_txt), I32),
+            "patch_embeds": _sds((B, S_img, cfg.d_model), cfg.dtype),
+        }
+    return {"tokens": _sds((B, S), I32), "labels": _sds((B, S), I32)}
+
+
+def decode_input_specs(cfg: ModelConfig, shape: ShapeConfig) -> dict:
+    """ShapeDtypeStructs for one ``decode_step`` call with a full cache."""
+    from repro.models.layers import is_spec, ParamSpec
+
+    B, cap = shape.global_batch, shape.seq_len
+    api = get_model(cfg)
+    cache = jax.tree.map(
+        lambda s: _sds(s.shape, s.dtype), api.cache_schema(B, cap),
+        is_leaf=lambda x: isinstance(x, ParamSpec),
+    )
+    return {
+        "token": _sds((B, 1), I32),
+        "cache": cache,
+        "cache_len": _sds((), I32),
+    }
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeConfig) -> dict:
+    if shape.kind == "decode":
+        return decode_input_specs(cfg, shape)
+    if shape.kind == "prefill":
+        # prefill lowers the full-sequence forward (loss-free): same inputs
+        spec = train_input_specs(cfg, shape)
+        spec.pop("labels", None)
+        return spec
+    return train_input_specs(cfg, shape)
+
+
+def make_batch(rng: jax.Array, cfg: ModelConfig, batch: int, seq: int) -> dict:
+    """Concrete random batch at smoke scale."""
+    kt, kl, kf = jax.random.split(rng, 3)
+    V = cfg.vocab_size
+    if cfg.num_encoder_layers:
+        S_dec = max(seq // encdec.DEC_RATIO, 8)
+        return {
+            "frames": jax.random.normal(kf, (batch, seq, cfg.d_model), jnp.float32)
+            .astype(jnp.dtype(cfg.dtype)),
+            "tokens": jax.random.randint(kt, (batch, S_dec), 0, V, I32),
+            "labels": jax.random.randint(kl, (batch, S_dec), 0, V, I32),
+        }
+    if cfg.frontend == "vision":
+        S_img = max(seq // 4, 4)
+        S_txt = seq - S_img
+        return {
+            "tokens": jax.random.randint(kt, (batch, S_txt), 0, V, I32),
+            "labels": jax.random.randint(kl, (batch, S_txt), 0, V, I32),
+            "patch_embeds": jax.random.normal(kf, (batch, S_img, cfg.d_model), jnp.float32)
+            .astype(jnp.dtype(cfg.dtype)),
+        }
+    return {
+        "tokens": jax.random.randint(kt, (batch, seq), 0, V, I32),
+        "labels": jax.random.randint(kl, (batch, seq), 0, V, I32),
+    }

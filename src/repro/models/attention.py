@@ -1,0 +1,158 @@
+"""Attention execution paths.
+
+Three paths, selected by shape (and backend — see kernels/ops.py):
+  - ``full_attention``    : materializes (Sq, Skv) scores. Smoke scale only.
+  - ``blocked_attention`` : lax.scan over query blocks; memory bounded by
+                            block_q × Skv. The pure-XLA production path for
+                            long sequences (the Pallas flash kernel replaces
+                            it on real TPUs; see kernels/flash_attention.py).
+  - ``decode_attention``  : single-query attention against a KV cache.
+
+All paths implement GQA natively (no KV head repetition) plus causal,
+sliding-window masking and grok-style logit soft-capping.
+"""
+from __future__ import annotations
+
+import math
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1.0e30
+
+
+def _softcap(scores: jax.Array, cap: float) -> jax.Array:
+    if cap and cap > 0.0:
+        return cap * jnp.tanh(scores / cap)
+    return scores
+
+
+def _mask_bias(
+    q_pos: jax.Array,  # (Sq,) absolute positions of queries
+    k_pos: jax.Array,  # (Skv,) absolute positions of keys
+    causal: bool,
+    window: int,
+) -> jax.Array:
+    """Additive mask (Sq, Skv) in fp32."""
+    ok = jnp.ones((q_pos.shape[0], k_pos.shape[0]), dtype=bool)
+    if causal:
+        ok &= k_pos[None, :] <= q_pos[:, None]
+    if window and window > 0:
+        ok &= k_pos[None, :] > (q_pos[:, None] - window)
+    return jnp.where(ok, 0.0, NEG_INF)
+
+
+def _gqa_scores(q: jax.Array, k: jax.Array) -> jax.Array:
+    """q: (B,Sq,KV,G,hd), k: (B,Skv,KV,hd) -> (B,KV,G,Sq,Skv) fp32."""
+    return jnp.einsum("bsngh,btnh->bngst", q, k, preferred_element_type=jnp.float32)
+
+
+def _gqa_out(p: jax.Array, v: jax.Array) -> jax.Array:
+    """p: (B,KV,G,Sq,Skv) fp32, v: (B,Skv,KV,hd) -> (B,Sq,KV,G,hd)."""
+    return jnp.einsum("bngst,btnh->bsngh", p, v.astype(p.dtype))
+
+
+def full_attention(
+    q: jax.Array,  # (B, Sq, H, hd)
+    k: jax.Array,  # (B, Skv, KV, hd)
+    v: jax.Array,
+    *,
+    causal: bool = True,
+    window: int = 0,
+    softcap: float = 0.0,
+    q_offset: int = 0,
+) -> jax.Array:
+    B, Sq, H, hd = q.shape
+    KV = k.shape[2]
+    G = H // KV
+    qg = q.reshape(B, Sq, KV, G, hd) * (1.0 / math.sqrt(hd))
+    scores = _gqa_scores(qg, k)
+    scores = _softcap(scores, softcap)
+    q_pos = jnp.arange(Sq) + q_offset
+    k_pos = jnp.arange(k.shape[1])
+    scores = scores + _mask_bias(q_pos, k_pos, causal, window)
+    p = jax.nn.softmax(scores, axis=-1)
+    out = _gqa_out(p, v)
+    return out.reshape(B, Sq, H, hd).astype(q.dtype)
+
+
+def blocked_attention(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    *,
+    causal: bool = True,
+    window: int = 0,
+    softcap: float = 0.0,
+    block_q: int = 512,
+) -> jax.Array:
+    """Scan over query blocks; each block softmaxes over its full (masked)
+    key row, so no online-softmax state is needed and peak memory is
+    O(block_q × Skv) per head group."""
+    B, Sq, H, hd = q.shape
+    if Sq % block_q != 0 or Sq <= block_q:
+        return full_attention(q, k, v, causal=causal, window=window, softcap=softcap)
+    KV = k.shape[2]
+    G = H // KV
+    nblk = Sq // block_q
+    qg = q.reshape(B, nblk, block_q, KV, G, hd) * (1.0 / math.sqrt(hd))
+    qg = jnp.moveaxis(qg, 1, 0)  # (nblk, B, block_q, KV, G, hd)
+    k_pos = jnp.arange(k.shape[1])
+
+    def body(carry, inp):
+        blk_idx, qb = inp
+        scores = _gqa_scores(qb, k)
+        scores = _softcap(scores, softcap)
+        q_pos = blk_idx * block_q + jnp.arange(block_q)
+        ok = jnp.ones((block_q, k.shape[1]), dtype=bool)
+        if causal:
+            ok &= k_pos[None, :] <= q_pos[:, None]
+        if window and window > 0:
+            ok &= k_pos[None, :] > (q_pos[:, None] - window)
+        scores = scores + jnp.where(ok, 0.0, NEG_INF)
+        p = jax.nn.softmax(scores, axis=-1)
+        ob = _gqa_out(p, v).astype(q.dtype)  # (B, block_q, KV, G, hd)
+        return carry, ob
+
+    _, out = jax.lax.scan(body, None, (jnp.arange(nblk), qg))
+    out = jnp.moveaxis(out, 0, 1).reshape(B, Sq, H, hd)
+    return out
+
+
+def decode_attention(
+    q: jax.Array,  # (B, 1, H, hd)
+    k_cache: jax.Array,  # (B, Skv, KV, hd)
+    v_cache: jax.Array,
+    cache_len: jax.Array,  # (B,) or scalar — number of valid cache entries
+    *,
+    window: int = 0,
+    softcap: float = 0.0,
+) -> jax.Array:
+    """Single new query attends over the valid prefix of the cache."""
+    B, _, H, hd = q.shape
+    Skv, KV = k_cache.shape[1], k_cache.shape[2]
+    G = H // KV
+    qg = q.reshape(B, 1, KV, G, hd) * (1.0 / math.sqrt(hd))
+    scores = _gqa_scores(qg, k_cache)  # (B,KV,G,1,Skv)
+    scores = _softcap(scores, softcap)
+    k_pos = jnp.arange(Skv)
+    valid = k_pos[None, :] < jnp.reshape(cache_len, (-1, 1))  # (B, Skv)
+    if window and window > 0:
+        valid &= k_pos[None, :] >= (jnp.reshape(cache_len, (-1, 1)) - window)
+    bias = jnp.where(valid, 0.0, NEG_INF)[:, None, None, None, :]
+    p = jax.nn.softmax(scores + bias, axis=-1)
+    out = _gqa_out(p, v_cache)
+    return out.reshape(B, 1, H, hd).astype(q.dtype)
+
+
+def attend(
+    q, k, v, *, causal=True, window=0, softcap=0.0, block_q=512, min_blocked_len=2048
+):
+    """Shape-dispatching attention used by the model forward passes."""
+    if q.shape[1] >= min_blocked_len:
+        return blocked_attention(
+            q, k, v, causal=causal, window=window, softcap=softcap, block_q=block_q
+        )
+    return full_attention(q, k, v, causal=causal, window=window, softcap=softcap)

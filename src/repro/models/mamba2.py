@@ -1,0 +1,174 @@
+"""Mamba-2 (SSD — state space duality) block. [arXiv:2405.21060]
+
+TPU adaptation (DESIGN.md §2): the CUDA selective-scan becomes the *chunked*
+SSD algorithm — intra-chunk work is dense MXU matmuls, inter-chunk state is a
+short recurrence over n_chunks (a lax.scan over S/chunk steps).  The Pallas
+kernel (kernels/ssd_scan.py) implements the intra-chunk part with explicit
+VMEM tiling; this module is the XLA path + the block plumbing.
+
+Layout: x (B, S, H, P) heads; B/C projections shared across heads
+(ngroups=1), state size N; per-head scalar decay A and dt.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import ParamSpec, cast, rms_norm
+
+
+def mamba2_schema(cfg) -> dict:
+    D, din = cfg.d_model, cfg.ssm_d_inner
+    N, H = cfg.ssm_state, cfg.ssm_heads
+    K = cfg.ssm_conv
+    return {
+        "wx": ParamSpec((D, din), ("embed", "ssm_inner")),
+        "wz": ParamSpec((D, din), ("embed", "ssm_inner")),
+        "wB": ParamSpec((D, N), ("embed", "ssm_state")),
+        "wC": ParamSpec((D, N), ("embed", "ssm_state")),
+        "wdt": ParamSpec((D, H), ("embed", "heads")),
+        "dt_bias": ParamSpec((H,), ("heads",), init="zeros"),
+        "A_log": ParamSpec((H,), ("heads",), init="zeros"),
+        "D_skip": ParamSpec((H,), ("heads",), init="ones"),
+        "conv_w": ParamSpec((K, din), ("norm", "ssm_inner"), init="small_normal"),
+        "conv_b": ParamSpec((din,), ("ssm_inner",), init="zeros"),
+        "gate_norm": ParamSpec((din,), ("ssm_inner",), init="zeros"),
+        "wo": ParamSpec((din, D), ("ssm_inner", "embed")),
+    }
+
+
+def causal_conv1d(x: jax.Array, w: jax.Array, b: jax.Array) -> jax.Array:
+    """Depthwise causal conv over seq. x: (B,S,C), w: (K,C)."""
+    K = w.shape[0]
+    pad = jnp.pad(x, ((0, 0), (K - 1, 0), (0, 0)))
+    out = jnp.zeros_like(x)
+    for i in range(K):  # K is tiny (4); unrolled adds, no conv primitive needed
+        out = out + pad[:, i : i + x.shape[1], :] * w[i][None, None, :]
+    return jax.nn.silu(out + b[None, None, :])
+
+
+def _segsum(logd: jax.Array) -> jax.Array:
+    """logd: (..., L). Returns (..., L, L) M[i,j] = sum_{k=j+1..i} logd_k for
+    j <= i, -inf above diagonal (stable segment-sum trick from the SSD paper)."""
+    L = logd.shape[-1]
+    c = jnp.cumsum(logd, axis=-1)
+    diff = c[..., :, None] - c[..., None, :]
+    mask = jnp.tril(jnp.ones((L, L), dtype=bool), 0)
+    return jnp.where(mask, diff, -jnp.inf)
+
+
+def ssd_chunked(
+    x: jax.Array,  # (B, S, H, P) inputs (pre-multiplied by nothing; dt applied here)
+    dt: jax.Array,  # (B, S, H) softplus'd step sizes
+    A: jax.Array,  # (H,) negative decay rates
+    Bm: jax.Array,  # (B, S, N)
+    Cm: jax.Array,  # (B, S, N)
+    chunk: int = 128,
+    init_state=None,  # (B, H, P, N) or None
+):
+    """Chunked SSD. Returns (y (B,S,H,P), final_state (B,H,P,N))."""
+    Bsz, S, H, P = x.shape
+    N = Bm.shape[-1]
+    assert S % chunk == 0, (S, chunk)
+    nc = S // chunk
+    f32 = jnp.float32
+
+    xb = (x.astype(f32) * dt.astype(f32)[..., None]).reshape(Bsz, nc, chunk, H, P)
+    dA = (dt.astype(f32) * A.astype(f32)[None, None, :]).reshape(Bsz, nc, chunk, H)
+    Bc = Bm.astype(f32).reshape(Bsz, nc, chunk, N)
+    Cc = Cm.astype(f32).reshape(Bsz, nc, chunk, N)
+
+    # --- intra-chunk (diagonal blocks): Y = (C B^T ⊙ L) X̄
+    dAh = jnp.moveaxis(dA, -1, 2)  # (B, nc, H, L)
+    L = jnp.exp(_segsum(dAh))  # (B, nc, H, L, L)
+    CB = jnp.einsum("bcln,bcmn->bclm", Cc, Bc)  # (B, nc, L, L)
+    y_diag = jnp.einsum("bchlm,bclm,bcmhp->bclhp", L, CB, xb)
+
+    # --- chunk summaries: state contribution of each chunk
+    cum = jnp.cumsum(dAh, axis=-1)  # (B, nc, H, L)
+    decay_to_end = jnp.exp(cum[..., -1:] - cum)  # (B, nc, H, L)
+    states = jnp.einsum("bchl,bcln,bclhp->bchpn", decay_to_end, Bc, xb)
+
+    # --- inter-chunk recurrence over nc (short scan)
+    chunk_decay = jnp.exp(cum[..., -1])  # (B, nc, H)
+    s0 = (
+        jnp.zeros((Bsz, H, P, N), f32)
+        if init_state is None
+        else init_state.astype(f32)
+    )
+
+    def body(s_prev, inp):
+        st, dec = inp  # (B,H,P,N), (B,H)
+        s_new = s_prev * dec[..., None, None] + st
+        return s_new, s_prev
+
+    sc = jnp.moveaxis(states, 1, 0)  # (nc, B, H, P, N)
+    dc = jnp.moveaxis(chunk_decay, 1, 0)  # (nc, B, H)
+    final_state, prev_states = jax.lax.scan(body, s0, (sc, dc))
+    prev_states = jnp.moveaxis(prev_states, 0, 1)  # (B, nc, H, P, N)
+
+    # --- off-diagonal contribution: Y += (C ⊙ decay_from_start) · state_prev
+    decay_from_start = jnp.exp(cum)  # (B, nc, H, L)
+    y_off = jnp.einsum("bcln,bchl,bchpn->bclhp", Cc, decay_from_start, prev_states)
+
+    y = (y_diag + y_off).reshape(Bsz, S, H, P)
+    return y.astype(x.dtype), final_state
+
+
+def ssd_decode_step(
+    x: jax.Array,  # (B, 1, H, P)
+    dt: jax.Array,  # (B, 1, H)
+    A: jax.Array,  # (H,)
+    Bm: jax.Array,  # (B, 1, N)
+    Cm: jax.Array,  # (B, 1, N)
+    state: jax.Array,  # (B, H, P, N) fp32
+):
+    f32 = jnp.float32
+    xb = x.astype(f32)[:, 0] * dt.astype(f32)[:, 0, :, None]  # (B,H,P)
+    dec = jnp.exp(dt.astype(f32)[:, 0] * A.astype(f32)[None, :])  # (B,H)
+    upd = jnp.einsum("bhp,bn->bhpn", xb, Bm.astype(f32)[:, 0])
+    state = state * dec[..., None, None] + upd
+    y = jnp.einsum("bhpn,bn->bhp", state, Cm.astype(f32)[:, 0])
+    return y[:, None].astype(x.dtype), state
+
+
+def mamba2_apply(p: dict, u: jax.Array, cfg, state=None, decode: bool = False):
+    """u: (B, S, D). Returns (out (B,S,D), new_state or None).
+
+    Decode carries state = (ssm_state (B,H,P,N) fp32, conv_state (B,K-1,din))
+    — the conv window tail, so decode matches the training conv exactly."""
+    dt_c = u.dtype
+    H, P, N = cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_state
+    B, S, D = u.shape
+    x = jnp.einsum("bsd,di->bsi", u, cast(p["wx"], dt_c))
+    z = jnp.einsum("bsd,di->bsi", u, cast(p["wz"], dt_c))
+    if decode:
+        ssm_state, conv_state = state
+        window = jnp.concatenate([conv_state.astype(dt_c), x], axis=1)  # (B,K,din)
+        w = cast(p["conv_w"], dt_c)
+        xc = jnp.einsum("bki,ki->bi", window, w)[:, None, :]
+        x = jax.nn.silu(xc + p["conv_b"].astype(dt_c)[None, None, :])
+        new_conv_state = window[:, 1:]
+        state = ssm_state
+    else:
+        x = causal_conv1d(x, cast(p["conv_w"], dt_c), cast(p["conv_b"], dt_c))
+    Bm = jnp.einsum("bsd,dn->bsn", u, cast(p["wB"], dt_c))
+    Cm = jnp.einsum("bsd,dn->bsn", u, cast(p["wC"], dt_c))
+    dtv = jax.nn.softplus(
+        jnp.einsum("bsd,dh->bsh", u, cast(p["wdt"], dt_c)).astype(jnp.float32)
+        + p["dt_bias"].astype(jnp.float32)
+    )
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))
+    xh = x.reshape(B, S, H, P)
+    if decode:
+        y, new_state = ssd_decode_step(xh, dtv, A, Bm, Cm, state)
+    else:
+        chunk = 128 if S % 128 == 0 else (64 if S % 64 == 0 else S)
+        y, new_state = ssd_chunked(xh, dtv, A, Bm, Cm, chunk=chunk, init_state=state)
+    y = y + xh * p["D_skip"].astype(dt_c)[None, None, :, None]
+    y = y.reshape(B, S, H * P)
+    y = rms_norm(y * jax.nn.silu(z), p["gate_norm"], cfg.norm_eps)
+    out = jnp.einsum("bsi,id->bsd", y, cast(p["wo"], dt_c))
+    if decode:
+        return out, (new_state, new_conv_state)
+    return out, new_state

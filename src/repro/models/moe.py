@@ -1,0 +1,107 @@
+"""Top-k MoE FFN with capacity-based scatter dispatch.
+
+Dispatch avoids the O(T·E·C) GShard combine tensor: each (token, k) pair
+computes its (expert, slot) coordinate via a cumulative-sum over the one-hot
+routing matrix, then a scatter-add builds the (E, C, D) expert buffer and a
+gather reads results back.  Tokens beyond capacity are dropped (standard
+capacity-factor semantics); the router load-balancing auxiliary loss is
+returned alongside the output.
+
+Parallelism (dist/sharding.py rules):
+  - 'expert'  -> 'model'  (EP; qwen3-moe: 128 experts / 16 = 8 per device)
+  - 'moe_mlp' -> 'model'  (TP-on-experts; grok-1: 8 experts < 16-way axis)
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.dist import fsdp
+from repro.models.layers import ParamSpec, cast, swiglu
+
+
+def moe_schema(cfg) -> dict:
+    D, E, F = cfg.d_model, cfg.num_experts, cfg.moe_d_ff
+    return {
+        "router": ParamSpec((D, E), ("embed", "expert"), init="small_normal"),
+        "wg": ParamSpec((E, D, F), ("expert", "embed", "moe_mlp")),
+        "wu": ParamSpec((E, D, F), ("expert", "embed", "moe_mlp")),
+        "wd": ParamSpec((E, F, D), ("expert", "moe_mlp", "embed")),
+    }
+
+
+def _capacity(tokens: int, cfg) -> int:
+    c = int(tokens * cfg.experts_per_tok * cfg.capacity_factor / cfg.num_experts)
+    return max(cfg.experts_per_tok, c)
+
+
+def moe_apply(p: dict, x: jax.Array, cfg) -> tuple:
+    """x: (B, S, D) -> (out (B,S,D), aux_loss scalar fp32)."""
+    B, S, D = x.shape
+    E, K = cfg.num_experts, cfg.experts_per_tok
+    T = B * S
+    C = _capacity(T, cfg)
+    xt = x.reshape(T, D)
+
+    # --- routing (fp32) ---
+    logits = jnp.einsum("td,de->te", xt.astype(jnp.float32), p["router"].astype(jnp.float32))
+    probs = jax.nn.softmax(logits, axis=-1)  # (T, E)
+    gate_vals, idx = jax.lax.top_k(probs, K)  # (T, K)
+    gate_vals = gate_vals / jnp.maximum(jnp.sum(gate_vals, axis=-1, keepdims=True), 1e-9)
+
+    # load-balancing aux loss (Switch-style): E * sum_e f_e * p_e
+    me = jnp.mean(probs, axis=0)  # (E,)
+    onehot_top1 = jax.nn.one_hot(idx[:, 0], E, dtype=jnp.float32)
+    ce = jnp.mean(onehot_top1, axis=0)
+    aux = E * jnp.sum(me * ce)
+
+    # --- group-local slot assignment (GShard-style): capacity is per DATA
+    # shard so scatter indices never cross the token sharding — the only
+    # cross-device movement left is the expert-axis all-to-all ---
+    groups = fsdp.group_count("act_tokens")
+    TK = T * K
+    while TK % groups != 0:  # defensive (token count always divides in practice)
+        groups //= 2
+    TKg = TK // groups
+    Cg = max(K, C // groups)
+    flat_e = idx.reshape(groups, TKg)  # (G, TKg)
+    onehot = jax.nn.one_hot(flat_e, E, dtype=jnp.int32)  # (G, TKg, E)
+    pos = jnp.cumsum(onehot, axis=1) - onehot  # per-group prefix count
+    slot = jnp.take_along_axis(pos, flat_e[..., None], axis=2)[..., 0]  # (G, TKg)
+    keep = slot < Cg
+    slot_c = jnp.minimum(slot, Cg - 1)
+    g_idx = jax.lax.broadcasted_iota(jnp.int32, (groups, TKg), 0)
+
+    # --- dispatch: scatter tokens into (G, E, Cg, D).
+    # The scatter stays LOCAL: its result is sharded only on the group (data)
+    # dim — scattering directly into an expert-sharded buffer would make
+    # GSPMD emit buffer-sized partial-scatter all-reduces over 'model'
+    # (EXPERIMENTS.md §Perf, qwen3 iteration 2). The expert dim is then
+    # sliced onto the EP axis by a constraint (a local slice, no collective).
+    src = jnp.repeat(xt, K, axis=0).reshape(groups, TKg, D)
+    src = src * keep[..., None].astype(src.dtype)
+    src = fsdp.constrain(src, ("act_tokens", None, "act_embed"))
+    buf = jnp.zeros((groups, E, Cg, D), dtype=x.dtype)
+    buf = buf.at[g_idx, flat_e, slot_c].add(src, mode="drop")
+    buf = fsdp.constrain(buf, ("act_tokens", None, None, "act_embed"))
+    # EP slice: each model shard keeps its experts
+    buf = fsdp.constrain(buf, ("act_tokens", "act_expert", None, "act_embed"))
+
+    # --- expert GLU compute ---
+    dt = x.dtype
+    g = jnp.einsum("gecd,edf->gecf", buf, cast(p["wg"], dt))
+    g = fsdp.constrain(g, ("act_tokens", "act_expert", None, "act_moe_ff"))
+    u = jnp.einsum("gecd,edf->gecf", buf, cast(p["wu"], dt))
+    u = fsdp.constrain(u, ("act_tokens", "act_expert", None, "act_moe_ff"))
+    y = jnp.einsum("gecf,efd->gecd", swiglu(g, u), cast(p["wd"], dt))
+    y = fsdp.constrain(y, ("act_tokens", "act_expert", None, "act_embed"))
+    # combine side: gather needs all experts per group -> all-gather over the
+    # EP axis (the GSPMD analogue of the return all-to-all)
+    y = fsdp.constrain(y, ("act_tokens", None, None, "act_embed"))
+
+    # --- combine: gather each (t,k) result, weight by gate ---
+    out_tk = y[g_idx, flat_e, slot_c]  # (G, TKg, D)
+    out_tk = fsdp.constrain(out_tk, ("act_tokens", None, "act_embed"))
+    w = (gate_vals.reshape(groups, TKg) * keep.astype(jnp.float32)).astype(dt)
+    out = (out_tk * w[..., None]).reshape(T, K, D).sum(axis=1)
+    return out.reshape(B, S, D), aux

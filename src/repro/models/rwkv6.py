@@ -1,0 +1,176 @@
+"""RWKV-6 "Finch" block — attention-free, data-dependent decay.
+[arXiv:2404.05892]
+
+Time-mix: per-head linear recurrence S_t = diag(w_t) S_{t-1} + k_t ⊗ v_t with
+*data-dependent* per-channel decay w_t (the Finch hallmark, produced by a
+low-rank projection), read out as o_t = r_t · (S_{t-1} + diag(u) k_t ⊗ v_t).
+
+Training uses the chunked parallel form (intra-chunk O(L²) matmuls +
+inter-chunk state recurrence — same TPU-native structure as SSD); decode
+carries the (B, H, dk, dv) state.  kernels/wkv6.py is the Pallas version of
+the chunk inner loop; kernels/ref.py holds the sequential oracle.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import ParamSpec, cast, rms_norm
+
+DECAY_RANK = 64
+
+
+def rwkv6_schema(cfg) -> dict:
+    D, F = cfg.d_model, cfg.d_ff
+    H, hd = cfg.num_heads, cfg.d_head
+    return {
+        # time-mix
+        "mix_r": ParamSpec((D,), ("norm",), init="zeros"),
+        "mix_k": ParamSpec((D,), ("norm",), init="zeros"),
+        "mix_v": ParamSpec((D,), ("norm",), init="zeros"),
+        "mix_w": ParamSpec((D,), ("norm",), init="zeros"),
+        "mix_g": ParamSpec((D,), ("norm",), init="zeros"),
+        "wr": ParamSpec((D, H, hd), ("embed", "heads", "head_dim")),
+        "wk": ParamSpec((D, H, hd), ("embed", "heads", "head_dim")),
+        "wv": ParamSpec((D, H, hd), ("embed", "heads", "head_dim")),
+        "wg": ParamSpec((D, H, hd), ("embed", "heads", "head_dim")),
+        "w_lora_a": ParamSpec((D, DECAY_RANK), ("embed", "norm"), init="small_normal"),
+        "w_lora_b": ParamSpec((DECAY_RANK, D), ("norm", "embed"), init="small_normal"),
+        "w0": ParamSpec((D,), ("norm",), init="zeros"),
+        "u_bonus": ParamSpec((H, hd), ("heads", "head_dim"), init="small_normal"),
+        "ln_x": ParamSpec((D,), ("norm",), init="zeros"),
+        "wo": ParamSpec((H, hd, D), ("heads", "head_dim", "embed")),
+        # channel-mix
+        "cmix_k": ParamSpec((D,), ("norm",), init="zeros"),
+        "cmix_r": ParamSpec((D,), ("norm",), init="zeros"),
+        "cw_k": ParamSpec((D, F), ("embed", "mlp")),
+        "cw_v": ParamSpec((F, D), ("mlp", "embed")),
+        "cw_r": ParamSpec((D, D), ("embed", "embed_out")),
+    }
+
+
+def token_shift(x: jax.Array, prev: jax.Array = None) -> jax.Array:
+    """x: (B,S,D) -> previous token's features (zeros / `prev` at position 0)."""
+    shifted = jnp.pad(x, ((0, 0), (1, 0), (0, 0)))[:, :-1]
+    if prev is not None:
+        shifted = shifted.at[:, 0].set(prev)
+    return shifted
+
+
+def _mix(x, xs, mu):
+    return x + (xs - x) * jax.nn.sigmoid(mu)[None, None, :].astype(x.dtype)
+
+
+def wkv6_chunked(
+    r: jax.Array,  # (B, S, H, K)
+    k: jax.Array,  # (B, S, H, K)
+    v: jax.Array,  # (B, S, H, V)
+    w: jax.Array,  # (B, S, H, K)  per-channel decay in (0,1)
+    u: jax.Array,  # (H, K) bonus
+    chunk: int = 64,
+    init_state=None,  # (B, H, K, V)
+):
+    """Chunked parallel WKV-6. Returns (o (B,S,H,V), final_state)."""
+    B, S, H, K = r.shape
+    V = v.shape[-1]
+    assert S % chunk == 0, (S, chunk)
+    nc = S // chunk
+    f32 = jnp.float32
+    rc = r.astype(f32).reshape(B, nc, chunk, H, K)
+    kc = k.astype(f32).reshape(B, nc, chunk, H, K)
+    vc = v.astype(f32).reshape(B, nc, chunk, H, V)
+    lw = jnp.log(jnp.clip(w.astype(f32), 1e-6, 1.0)).reshape(B, nc, chunk, H, K)
+    cs = jnp.cumsum(lw, axis=2)  # inclusive cumsum within chunk (B,nc,L,H,K)
+
+    # intra-chunk: A[t,j] = r_t · (k_j ⊙ exp(cs_{t-1} - cs_j)) for j<t; diag uses u
+    r_dec = rc * jnp.exp(cs - lw)  # r_t ⊙ exp(cs_{t-1})  (cs_{t-1} = cs_t - lw_t)
+    k_dec = kc * jnp.exp(-cs)  # k_j ⊙ exp(-cs_j)
+    A = jnp.einsum("bclhk,bcmhk->bchlm", r_dec, k_dec)  # (B,nc,H,L,L)
+    L_idx = jnp.arange(chunk)
+    strict = (L_idx[:, None] > L_idx[None, :])  # j < t
+    A = A * strict[None, None, None, :, :]
+    diag = jnp.einsum("bclhk,hk,bclhk->bclh", rc, u.astype(f32), kc)  # (B,nc,L,H)
+    o_intra = jnp.einsum("bchlm,bcmhv->bclhv", A, vc)
+    o_intra = o_intra + diag[..., None] * vc
+
+    # chunk state summaries: sum_j (k_j ⊙ exp(cs_L - cs_j)) ⊗ v_j
+    cs_last = cs[:, :, -1:]  # (B,nc,1,H,K)
+    k_tail = kc * jnp.exp(cs_last - cs)
+    chunk_states = jnp.einsum("bclhk,bclhv->bchkv", k_tail, vc)
+    chunk_decay = jnp.exp(cs_last[:, :, 0])  # (B,nc,H,K)
+
+    s0 = (
+        jnp.zeros((B, H, K, V), f32) if init_state is None else init_state.astype(f32)
+    )
+
+    def body(s_prev, inp):
+        st, dec = inp  # (B,H,K,V), (B,H,K)
+        return s_prev * dec[..., None] + st, s_prev
+
+    final_state, prev_states = jax.lax.scan(
+        body,
+        s0,
+        (jnp.moveaxis(chunk_states, 1, 0), jnp.moveaxis(chunk_decay, 1, 0)),
+    )
+    prev_states = jnp.moveaxis(prev_states, 0, 1)  # (B,nc,H,K,V)
+
+    # inter-chunk: o_t += (r_t ⊙ exp(cs_{t-1})) · S_prev
+    o_inter = jnp.einsum("bclhk,bchkv->bclhv", r_dec, prev_states)
+    o = (o_intra + o_inter).reshape(B, S, H, V)
+    return o.astype(r.dtype), final_state
+
+
+def wkv6_decode_step(r, k, v, w, u, state):
+    """Single-token step. r/k/v/w: (B,1,H,*); state (B,H,K,V) fp32."""
+    f32 = jnp.float32
+    r0, k0, v0, w0 = (a.astype(f32)[:, 0] for a in (r, k, v, w))
+    kv = jnp.einsum("bhk,bhv->bhkv", k0, v0)
+    o = jnp.einsum("bhk,bhkv->bhv", r0, state + u.astype(f32)[None, :, :, None] * kv)
+    state = state * w0[..., None] + kv
+    return o[:, None].astype(r.dtype), state
+
+
+def rwkv6_time_mix(p: dict, x: jax.Array, cfg, state=None, decode: bool = False,
+                   shift_state=None):
+    dt_c = x.dtype
+    B, S, D = x.shape
+    H, hd = cfg.num_heads, cfg.d_head
+    xs = token_shift(x, shift_state)
+    xr = _mix(x, xs, p["mix_r"])
+    xk = _mix(x, xs, p["mix_k"])
+    xv = _mix(x, xs, p["mix_v"])
+    xw = _mix(x, xs, p["mix_w"])
+    xg = _mix(x, xs, p["mix_g"])
+    r = jnp.einsum("bsd,dhk->bshk", xr, cast(p["wr"], dt_c))
+    k = jnp.einsum("bsd,dhk->bshk", xk, cast(p["wk"], dt_c))
+    v = jnp.einsum("bsd,dhk->bshk", xv, cast(p["wv"], dt_c))
+    g = jnp.einsum("bsd,dhk->bshk", xg, cast(p["wg"], dt_c))
+    # data-dependent decay (Finch): w = exp(-exp(w0 + lora(xw)))
+    dec = p["w0"].astype(jnp.float32)[None, None, :] + jnp.einsum(
+        "bsr,rd->bsd",
+        jnp.tanh(jnp.einsum("bsd,dr->bsr", xw.astype(jnp.float32), p["w_lora_a"].astype(jnp.float32))),
+        p["w_lora_b"].astype(jnp.float32),
+    )
+    w = jnp.exp(-jnp.exp(dec)).reshape(B, S, H, hd)
+    if decode:
+        o, new_state = wkv6_decode_step(r, k, v, w.astype(dt_c), p["u_bonus"], state)
+    else:
+        chunk = 64 if S % 64 == 0 else S
+        o, new_state = wkv6_chunked(r, k, v, w.astype(dt_c), p["u_bonus"], chunk=chunk,
+                                    init_state=state)
+    o = o.reshape(B, S, D)
+    o = rms_norm(o, p["ln_x"], cfg.norm_eps) * jax.nn.silu(g).reshape(B, S, D)
+    out = jnp.einsum("bshk,hkd->bsd", o.reshape(B, S, H, hd), cast(p["wo"], dt_c))
+    return out, new_state, x[:, -1]
+
+
+def rwkv6_channel_mix(p: dict, x: jax.Array, shift_state=None):
+    dt_c = x.dtype
+    xs = token_shift(x, shift_state)
+    xk = _mix(x, xs, p["cmix_k"])
+    xr = _mix(x, xs, p["cmix_r"])
+    k = jnp.einsum("bsd,df->bsf", xk, cast(p["cw_k"], dt_c))
+    k = jnp.square(jax.nn.relu(k))
+    kv = jnp.einsum("bsf,fd->bsd", k, cast(p["cw_v"], dt_c))
+    r = jax.nn.sigmoid(jnp.einsum("bsd,de->bse", xr, cast(p["cw_r"], dt_c)))
+    return r * kv, x[:, -1]

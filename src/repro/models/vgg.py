@@ -1,0 +1,65 @@
+"""VGG-16 in JAX — the paper's own evaluation model.
+
+Used by the paper-reproduction benchmarks (Fig 1/3/5/9/10, Table 3) and the
+burst-planner end-to-end demo. NHWC layout, lax conv.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.vgg16 import ConvSpec, DenseSpec, VGGConfig
+from repro.models.layers import ParamSpec, init_params, is_spec, softmax_xent
+
+
+def vgg_schema(vcfg: VGGConfig) -> dict:
+    schema: dict = {}
+    for spec in vcfg.layers:
+        if isinstance(spec, ConvSpec):
+            schema[spec.name] = {
+                "w": ParamSpec(
+                    (spec.kernel, spec.kernel, spec.in_ch, spec.out_ch),
+                    ("norm", "norm", "embed", "mlp"),
+                ),
+                "b": ParamSpec((spec.out_ch,), ("mlp",), init="zeros"),
+            }
+        else:
+            schema[spec.name] = {
+                "w": ParamSpec((spec.in_dim, spec.out_dim), ("embed", "mlp")),
+                "b": ParamSpec((spec.out_dim,), ("mlp",), init="zeros"),
+            }
+    return schema
+
+
+def forward(params: dict, images: jax.Array, vcfg: VGGConfig) -> jax.Array:
+    """images: (B, H, W, 3) -> logits (B, num_classes)."""
+    h = images
+    for spec in vcfg.layers:
+        p = params[spec.name]
+        if isinstance(spec, ConvSpec):
+            h = jax.lax.conv_general_dilated(
+                h, p["w"], window_strides=(1, 1), padding="SAME",
+                dimension_numbers=("NHWC", "HWIO", "NHWC"),
+            )
+            h = jax.nn.relu(h + p["b"])
+            if spec.pool_after:
+                h = jax.lax.reduce_window(
+                    h, -jnp.inf, jax.lax.max, (1, 2, 2, 1), (1, 2, 2, 1), "VALID"
+                )
+        else:
+            if h.ndim == 4:
+                h = h.reshape(h.shape[0], -1)
+            h = h @ p["w"] + p["b"]
+            if spec.name != vcfg.layers[-1].name:
+                h = jax.nn.relu(h)
+    return h
+
+
+def loss_fn(params: dict, batch: dict, vcfg: VGGConfig):
+    logits = forward(params, batch["images"], vcfg)
+    xent = softmax_xent(logits[:, None, :], batch["labels"][:, None])
+    return xent, {"loss": xent}
+
+
+def init(rng: jax.Array, vcfg: VGGConfig):
+    return init_params(rng, vgg_schema(vcfg))

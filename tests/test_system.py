@@ -1,0 +1,86 @@
+"""End-to-end system behaviour: training loop with faults, coordinator
+elasticity, multiplexed background work, loss goes down."""
+import dataclasses
+import os
+
+import jax
+import pytest
+
+from repro.configs import TRAIN_4K, get_config
+from repro.core.coordinator import ClusterCoordinator, Job
+from repro.launch.mesh import make_mesh
+from repro.models.graph import build_lm_graph, build_vgg_graph
+from repro.train.loop import TrainConfig, train
+
+SMOKE_SHAPE = dataclasses.replace(TRAIN_4K, seq_len=64, global_batch=4, name="smoke")
+
+
+@pytest.fixture(scope="module")
+def mesh():
+    return make_mesh(1, 1)
+
+
+def test_train_loss_decreases(mesh):
+    cfg = get_config("qwen2-1.5b").reduced()
+    report = train(cfg, SMOKE_SHAPE, mesh, TrainConfig(steps=25, seed=0))
+    assert report.steps_done == 25
+    first = sum(report.losses[:5]) / 5
+    last = sum(report.losses[-5:]) / 5
+    assert last < first, (first, last)
+
+
+def test_train_restart_from_checkpoint(mesh, tmp_path):
+    """Inject a failure mid-run; the loop restores the checkpoint and
+    completes all steps."""
+    cfg = get_config("llama3-8b").reduced()
+    ckpt_dir = str(tmp_path / "ck")
+    fired = {"done": False}
+
+    def injector(step):
+        if step == 12 and not fired["done"]:
+            fired["done"] = True
+            raise RuntimeError("injected device failure")
+
+    tc = TrainConfig(steps=15, ckpt_dir=ckpt_dir, ckpt_every=5)
+    report = train(cfg, SMOKE_SHAPE, mesh, tc, fault_injector=injector)
+    assert report.steps_done >= 15
+    assert report.restarts >= 1
+    assert report.mitigations.count("failure") == 1
+    from repro.checkpoint.ckpt import latest_step
+
+    assert latest_step(ckpt_dir) == 15
+
+
+def test_train_with_multiplexed_background(mesh):
+    cfg = get_config("qwen2-1.5b").reduced()
+    counter = {"n": 0}
+
+    def bg():
+        counter["n"] += 1
+
+    tc = TrainConfig(steps=6, bg_step_fn=bg)
+    report = train(cfg, SMOKE_SHAPE, mesh, tc)
+    assert report.bg_steps == counter["n"] > 0
+
+
+def test_coordinator_elastic_replan():
+    coord = ClusterCoordinator(16)
+    job = Job("fg", "foreground", build_lm_graph(get_config("llama3-8b"), TRAIN_4K),
+              amp_limit=2.0)
+    p16 = coord.submit_foreground(job)
+    assert p16.num_gpus == 16
+    p8 = coord.handle_failure(0)  # 15 healthy -> pow2 subset = 8
+    assert p8.num_gpus == 8
+    assert p8.total_time >= p16.total_time - 1e-12
+    p16b = coord.handle_join([16, 17])  # 17 healthy -> 16
+    assert p16b.num_gpus == 16
+
+
+def test_coordinator_collocation_sim():
+    coord = ClusterCoordinator(8)
+    from repro.configs.vgg16 import CONFIG as VCFG
+
+    coord.submit_foreground(Job("fg", "foreground", build_vgg_graph(VCFG, 32)))
+    res = coord.simulate_collocation()
+    assert res.fg_slowdown < 1.2
+    assert res.cluster_throughput > 0.0
