@@ -57,6 +57,26 @@ def run():
     return rows
 
 
+def smoke():
+    """CI sanity: one quick plan, asserting the core invariants."""
+    g = build_vgg_graph(VCFG, 32)
+    t0 = time.perf_counter()
+    bp = plan(g, 8, amp_limit=2.0, hw=A100)
+    dt = time.perf_counter() - t0
+    assert bp.total_time > 0 and bp.amplification <= 2.0 + 1e-9
+    print(f"smoke ok: vgg16@8 iter={bp.total_time * 1e3:.3f} ms "
+          f"amp={bp.amplification:.2f} search={dt:.3f}s")
+
+
 if __name__ == "__main__":
-    for r in run():
-        print(r["name"], r["derived"])
+    import argparse
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="single quick plan + invariant check (CI)")
+    args = ap.parse_args()
+    if args.smoke:
+        smoke()
+    else:
+        for r in run():
+            print(r["name"], r["derived"])

@@ -1,0 +1,43 @@
+"""repro.dist — sharded execution substrate (rules, FSDP, fault detection).
+
+This package turns planner output and model schemas into executable
+GSPMD layouts and keeps them healthy at runtime.  Public API:
+
+``repro.dist.sharding``
+    - ``pspec(dims, shape, rules, mesh, report=None)`` — logical axes ->
+      ``PartitionSpec`` with divisibility guard (drops recorded in
+      ``RuleReport``), no mesh-axis reuse, trailing-``None`` trimming.
+    - ``sharding_rules(cfg, mesh, shape_cfg=None)`` — per-(arch, mesh,
+      shape) rule set: attention-head / kv-head TP, MLP TP, MoE expert vs
+      tensor parallelism, FSDP on 'embed' (serving drops it for small
+      models), decode kv-sequence fallbacks (GQA + long-context).
+    - ``param_pspecs / param_shardings(schema, rules, mesh, report=None)``
+      — ParamSpec trees -> PartitionSpec / NamedSharding trees.
+    - ``batch_pspecs(cfg, shape, rules, mesh, specs, report=None)`` —
+      input-spec dicts (incl. decode KV caches) -> PartitionSpec trees.
+
+``repro.dist.fsdp``
+    - ``context(mesh, rules)`` — activate a layout for the hooks below;
+      all hooks are identity functions outside a context.
+    - ``gather(tree, schema)`` / ``gather_leaf(x, axes)`` — use-site
+      all-gather of FSDP-sharded weights (ZeRO-3 inside scan-over-layers).
+    - ``constrain(x, axes)`` — activation sharding constraint via rules.
+    - ``group_count(axis)`` — shard count of a logical axis (MoE capacity).
+
+``repro.dist.faults``
+    - ``StepTimer`` — EMA-deadline straggler-step detection.
+    - ``HeartbeatMonitor`` — per-worker timeout (failure) + step-lag
+      (straggler) classification with an injectable clock.
+    - ``MitigationLog`` — append-only mitigation record; feeds
+      ``ClusterCoordinator.handle_failure`` elastic re-planning.
+"""
+from repro.dist import fsdp  # noqa: F401
+from repro.dist.faults import HeartbeatMonitor, MitigationLog, StepTimer  # noqa: F401
+from repro.dist.sharding import (  # noqa: F401
+    RuleReport,
+    batch_pspecs,
+    param_pspecs,
+    param_shardings,
+    pspec,
+    sharding_rules,
+)

@@ -1,0 +1,99 @@
+"""FSDP-style parameter gathering + activation constraints (GSPMD).
+
+The models call three trace-time hooks:
+
+  - ``gather(tree, schema)`` / ``gather_leaf(x, axes)``: force the per-use
+    all-gather of FSDP-sharded weights by constraining them to a TP-only
+    layout (DP axes stripped).  Inside ``jax.lax.scan`` over layers this
+    yields ZeRO-3 behaviour: each layer's weights materialize just before
+    use and are released after.
+  - ``constrain(x, axes)``: ``with_sharding_constraint`` through the active
+    rule set (MoE dispatch relies on this to keep scatters local).
+  - ``group_count(axis)``: number of shards the active rules give a logical
+    axis (1 outside any context) — used for group-local capacity math.
+
+All hooks are identity functions outside a ``context(mesh, rules)`` block,
+so single-device smoke tests run the exact same model code unsharded.
+"""
+from __future__ import annotations
+
+import math
+from contextlib import contextmanager
+from typing import Any, Optional, Tuple
+
+from repro.dist.sharding import DP_AXES, mesh_axis_sizes, pspec
+from repro.models.layers import is_spec
+
+# Stack of (mesh, rules) — trace-time only, LIFO so contexts nest.
+_CTX: list = []
+
+
+@contextmanager
+def context(mesh, rules):
+    """Activate (mesh, rules) for gather/constrain/group_count."""
+    _CTX.append((mesh, rules))
+    try:
+        yield
+    finally:
+        _CTX.pop()
+
+
+def active() -> Optional[tuple]:
+    return _CTX[-1] if _CTX else None
+
+
+def group_count(axis: str) -> int:
+    """Shard count of a logical axis under the active rules (1 if inactive)."""
+    ctx = active()
+    if ctx is None:
+        return 1
+    mesh, rules = ctx
+    sizes = mesh_axis_sizes(mesh)
+    return int(math.prod(sizes.get(a, 1) for a in rules.get(axis, ()))) or 1
+
+
+def _tp_only_rules(rules) -> dict:
+    """The rule set with DP/FSDP axes stripped (what a gathered weight keeps)."""
+    dp = set(DP_AXES)
+    return {
+        k: tuple(a for a in v if a not in dp)
+        for k, v in rules.items()
+        if isinstance(v, (tuple, list))
+    }
+
+
+def _constrain(x, spec, mesh):
+    import jax
+    from jax.sharding import NamedSharding
+
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+
+
+def gather_leaf(x, axes: Tuple[str, ...]):
+    """All-gather an FSDP-sharded leaf at its use site (identity unsharded)."""
+    ctx = active()
+    if ctx is None:
+        return x
+    mesh, rules = ctx
+    return _constrain(x, pspec(axes, x.shape, _tp_only_rules(rules), mesh), mesh)
+
+
+def gather(params: Any, schema: Any) -> Any:
+    """``gather_leaf`` over a param subtree, axes taken from its schema."""
+    ctx = active()
+    if ctx is None:
+        return params
+    import jax
+
+    return jax.tree.map(
+        lambda s, x: gather_leaf(x, s.axes), schema, params, is_leaf=is_spec
+    )
+
+
+def constrain(x, axes: Tuple[Optional[str], ...]):
+    """Sharding-constrain an activation via the active rules (identity if none)."""
+    ctx = active()
+    if ctx is None:
+        return x
+    mesh, rules = ctx
+    return _constrain(x, pspec(axes, x.shape, rules, mesh), mesh)

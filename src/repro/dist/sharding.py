@@ -1,0 +1,229 @@
+"""Mesh-shape-driven sharding-rules engine.
+
+A *rule set* maps logical axis names (the vocabulary documented in
+models/layers.py) to tuples of mesh axis names.  ``sharding_rules`` derives
+one rule set per (ModelConfig, mesh, ShapeConfig) cell; ``pspec`` turns a
+(logical-axes, shape) pair into a ``PartitionSpec`` under three invariants:
+
+  1. divisibility guard — a dim whose size is not divisible by the product
+     of its mesh axes is left unsharded, and the drop is recorded in a
+     ``RuleReport`` so dry-runs can surface layout regressions;
+  2. no mesh-axis reuse — one mesh axis shards at most one dim per array
+     (GSPMD rejects duplicated axes); later occurrences are dropped;
+  3. trailing-``None`` trimming — specs are canonical (``P('data')``, never
+     ``P('data', None, None)``) so tests and goldens compare cleanly.
+
+Everything here reads only ``mesh.axis_names`` and ``mesh.devices.shape``,
+so rule derivation works on abstract mesh stand-ins (tests) and never
+touches jax device state.
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, field
+from typing import Any, Dict, List, Optional, Tuple
+
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.models.layers import is_spec
+
+# Mesh axes that carry the sample/FSDP dimension (ordered: outermost first).
+DP_AXES = ("pod", "data")
+
+# Per-device weight-byte budget above which serving cells keep FSDP on the
+# 'embed' dim (small models replicate their weights instead — the all-gather
+# would dominate decode latency).
+SERVE_FSDP_BYTES = 2e9
+
+
+@dataclass
+class RuleReport:
+    """Record of sharding rules dropped by the divisibility guard.
+
+    ``dropped`` entries are ``(logical_axis, dim_size, mesh_axes_product)``.
+    """
+
+    dropped: List[Tuple[str, int, int]] = field(default_factory=list)
+
+    def note_dropped(self, axis: str, dim: int, total: int) -> None:
+        self.dropped.append((axis, dim, total))
+
+
+def mesh_axis_sizes(mesh) -> Dict[str, int]:
+    return dict(zip(tuple(mesh.axis_names), tuple(mesh.devices.shape)))
+
+
+def dp_axes(mesh) -> Tuple[str, ...]:
+    sizes = mesh_axis_sizes(mesh)
+    return tuple(a for a in DP_AXES if a in sizes)
+
+
+def pspec(dims, shape, rules, mesh, report: Optional[RuleReport] = None) -> P:
+    """PartitionSpec for an array with logical ``dims`` and concrete ``shape``.
+
+    ``dims`` entries may be ``None`` (dimension never sharded).  Rules map
+    each logical axis to a tuple of mesh axes; missing rules mean replicated.
+    """
+    sizes = mesh_axis_sizes(mesh)
+    used: set = set()
+    parts: list = []
+    for name, dim in zip(dims, shape):
+        axes = tuple(rules.get(name, ())) if name is not None else ()
+        axes = tuple(a for a in axes if a in sizes)
+        if not axes or any(a in used for a in axes):
+            parts.append(None)
+            continue
+        total = int(math.prod(sizes[a] for a in axes))
+        if total > 1 and dim % total != 0:
+            if report is not None:
+                report.note_dropped(name, dim, total)
+            parts.append(None)
+            continue
+        used.update(axes)
+        parts.append(axes[0] if len(axes) == 1 else axes)
+    while parts and parts[-1] is None:
+        parts.pop()
+    return P(*parts)
+
+
+def sharding_rules(cfg, mesh, shape_cfg=None) -> Dict[str, Tuple[str, ...]]:
+    """Derive the logical-axis -> mesh-axes rule set for one benchmark cell.
+
+    ``shape_cfg=None`` means the training layout (the elastic checkpoint
+    path re-derives rules mesh-by-mesh without a shape).  All decisions are
+    pure functions of (cfg, mesh shape, shape kind) — no device state.
+    """
+    sizes = mesh_axis_sizes(mesh)
+    model = sizes.get("model", 1)
+    dp = dp_axes(mesh)
+    dp_size = int(math.prod(sizes[a] for a in dp)) if dp else 1
+    kind = shape_cfg.kind if shape_cfg is not None else "train"
+    batch = shape_cfg.global_batch if shape_cfg is not None else None
+
+    def tp(enabled: bool, n: int) -> Tuple[str, ...]:
+        return ("model",) if (enabled and n and n % model == 0) else ()
+
+    heads = tp(cfg.attn_tp, cfg.num_heads)
+    kv_heads = tp(cfg.kv_tp, cfg.num_kv_heads)
+    expert_par = bool(
+        cfg.is_moe and cfg.moe_parallelism == "expert" and cfg.num_experts % model == 0
+    )
+
+    # FSDP on 'embed': always during training; in serving only when the
+    # per-device weight bytes (post-TP) exceed the serving budget.
+    if kind == "train":
+        embed = dp
+    else:
+        per_dev = cfg.n_params() * np.dtype(cfg.dtype).itemsize / max(model, 1)
+        embed = dp if per_dev > SERVE_FSDP_BYTES else ()
+
+    # Activation batch/token dims ride the DP axes when divisible.
+    act_batch = dp if (batch is None or (dp_size and batch % dp_size == 0)) else ()
+    act_tokens = dp if (
+        shape_cfg is None or (dp_size and shape_cfg.tokens % dp_size == 0)
+    ) else ()
+
+    # KV-cache sequence dim (decode): recover parallelism lost elsewhere —
+    # DP axes when the batch cannot shard (long-context batch=1), the model
+    # axis when the kv heads cannot shard (GQA kv < model-axis width).
+    act_kv_seq: list = []
+    if kind == "decode":
+        if not act_batch:
+            act_kv_seq += list(dp)
+        if not kv_heads:
+            act_kv_seq.append("model")
+
+    rules: Dict[str, Tuple[str, ...]] = {
+        # -- weights --------------------------------------------------------
+        "layers": (),
+        "norm": (),
+        "head_dim": (),
+        "head_dim2": (),
+        "conv_k": (),
+        "ssm_state": (),
+        "embed": embed,
+        "embed_out": tp(True, cfg.d_model),
+        "heads": heads,
+        "kv_heads": kv_heads,
+        "mlp": tp(True, cfg.d_ff),
+        "vocab": tp(True, cfg.padded_vocab),
+        "expert": ("model",) if expert_par else (),
+        "moe_mlp": tp(cfg.is_moe and not expert_par, cfg.moe_d_ff),
+        "ssm_inner": tp(bool(cfg.ssm_state), cfg.ssm_d_inner),
+        # -- activations ----------------------------------------------------
+        "act_batch": act_batch,
+        "act_tokens": act_tokens,
+        "act_seq": ("model",) if cfg.sequence_parallel else (),
+        "act_embed": (),
+        "act_kv_seq": tuple(act_kv_seq),
+        "act_expert": ("model",) if expert_par else (),
+        "act_moe_ff": tp(cfg.is_moe and not expert_par, cfg.moe_d_ff),
+    }
+    return rules
+
+
+# ---------------------------------------------------------------------------
+# Schema trees -> PartitionSpec / NamedSharding trees
+# ---------------------------------------------------------------------------
+
+
+def param_pspecs(schema, rules, mesh, report: Optional[RuleReport] = None):
+    """Map a ParamSpec tree to a PartitionSpec tree under ``rules``."""
+    import jax
+
+    return jax.tree.map(
+        lambda s: pspec(s.axes, s.shape, rules, mesh, report), schema, is_leaf=is_spec
+    )
+
+
+def param_shardings(schema, rules, mesh, report: Optional[RuleReport] = None):
+    import jax
+
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, pspec(s.axes, s.shape, rules, mesh, report)),
+        schema,
+        is_leaf=is_spec,
+    )
+
+
+# Logical axes of the non-cache model inputs, by input name.
+_INPUT_AXES: Dict[str, Tuple[str, ...]] = {
+    "tokens": ("act_batch", "act_seq"),
+    "labels": ("act_batch", "act_seq"),
+    "frames": ("act_batch", "act_seq", "act_embed"),
+    "patch_embeds": ("act_batch", "act_seq", "act_embed"),
+    "token": ("act_batch", "act_seq"),
+    "cache_len": (),
+}
+
+
+def batch_pspecs(cfg, shape_cfg, rules, mesh, specs,
+                 report: Optional[RuleReport] = None):
+    """PartitionSpec tree matching an ``input_specs`` dict.
+
+    Plain inputs are mapped by name via ``_INPUT_AXES``; the decode ``cache``
+    subtree re-derives its logical axes from the model's cache schema (the
+    input specs carry only ShapeDtypeStructs).
+    """
+    import jax
+
+    out: Dict[str, Any] = {}
+    for key, spec in specs.items():
+        if key == "cache":
+            from repro.models.api import get_model
+
+            schema = get_model(cfg).cache_schema(
+                shape_cfg.global_batch, shape_cfg.seq_len
+            )
+            out[key] = jax.tree.map(
+                lambda s: pspec(s.axes, s.shape, rules, mesh, report),
+                schema,
+                is_leaf=is_spec,
+            )
+            continue
+        axes = _INPUT_AXES.get(key, ())
+        ndim = len(spec.shape)
+        axes = tuple(axes[:ndim]) + (None,) * (ndim - len(axes))
+        out[key] = pspec(axes, spec.shape, rules, mesh, report)
+    return out

@@ -1,0 +1,9 @@
+"""jax version compat for pallas TPU kernels.
+
+jax < 0.5 names the TPU compiler-params struct ``TPUCompilerParams``;
+newer releases renamed it ``CompilerParams``.  All kernels import the
+alias from here so the next rename is a one-line fix.
+"""
+from jax.experimental.pallas import tpu as pltpu
+
+CompilerParams = getattr(pltpu, "CompilerParams", None) or pltpu.TPUCompilerParams

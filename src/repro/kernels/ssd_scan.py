@@ -22,6 +22,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels._compat import CompilerParams as _CompilerParams
+
 
 def _ssd_kernel(a_ref, x_ref, dt_ref, b_ref, c_ref, y_ref, state_ref, *, chunk):
     c_idx = pl.program_id(2)
@@ -104,7 +106,7 @@ def ssd_scan(
         out_specs=pl.BlockSpec((1, 1, chunk, 1, P), lambda b, h, c: (b, c, 0, h, 0)),
         out_shape=jax.ShapeDtypeStruct((B, nc, chunk, H, P), x.dtype),
         scratch_shapes=[pltpu.VMEM((N, P), jnp.float32)],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=_CompilerParams(
             dimension_semantics=("parallel", "parallel", "arbitrary"),
         ),
         interpret=interpret,

@@ -18,6 +18,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels._compat import CompilerParams as _CompilerParams
+
 
 def _wkv6_kernel(u_ref, r_ref, k_ref, v_ref, w_ref, o_ref, state_ref, *, chunk):
     c_idx = pl.program_id(2)
@@ -102,7 +104,7 @@ def wkv6(
         out_specs=io_spec(V),
         out_shape=jax.ShapeDtypeStruct((B, nc, chunk, H, V), r.dtype),
         scratch_shapes=[pltpu.VMEM((K, V), jnp.float32)],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=_CompilerParams(
             dimension_semantics=("parallel", "parallel", "arbitrary"),
         ),
         interpret=interpret,

@@ -38,7 +38,12 @@ _WHILE_COND = re.compile(r"condition=%?([\w.\-]+)")
 _CALLS = re.compile(r"(?:to_apply|calls)=%?([\w.\-]+)")
 _BRANCHES = re.compile(r"branch_computations=\{([^}]*)\}")
 _TRIP = re.compile(r'"known_trip_count":\{"n":"?(\d+)"?\}')
-_DOT_RE = re.compile(r"=\s*([a-z0-9]+\[[0-9,]*\])\{?[^=]*?\bdot\(\s*%?([\w.\-]+)")
+# dot operands may carry inline types ("dot(f32[16,16]{1,0} %x, ...)" —
+# newer XLA text) or be bare names ("dot(%x, ...)"); capture both forms.
+_DOT_RE = re.compile(
+    r"=\s*([a-z0-9]+\[[0-9,]*\])\{?[^=]*?\bdot\(\s*"
+    r"(?:([a-z0-9]+\[[0-9,]*\])(?:\{[0-9,]*\})?\s+)?%?([\w.\-]+)"
+)
 _LHS_CONTRACT = re.compile(r"lhs_contracting_dims=\{([0-9,]*)\}")
 _DEF_RE = re.compile(r"^(?:ROOT\s+)?%([\w.\-]+)\s*=\s*(\(?[a-z0-9]+\[[0-9,]*\])")
 _OPERAND_NAMES = re.compile(r"%([\w.\-]+)")
@@ -182,7 +187,10 @@ def analyze_hlo(hlo_text: str, default_trip_count: int = 1) -> HloCosts:
         md = _DOT_RE.search(st)
         if md:
             _, rdims = _dims(md.group(1))
-            ldims = sym_dims.get(md.group(2), [])
+            if md.group(2):
+                _, ldims = _dims(md.group(2))
+            else:
+                ldims = sym_dims.get(md.group(3), [])
             mc = _LHS_CONTRACT.search(st)
             contract = 1
             if mc and mc.group(1):

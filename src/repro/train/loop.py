@@ -22,7 +22,7 @@ from repro.checkpoint import ckpt as ckpt_lib
 from repro.configs.base import ModelConfig, ShapeConfig
 from repro.core.multiplex import Collocator, MultiplexConfig, QoSMonitor
 from repro.data.pipeline import SyntheticLMData
-from repro.dist.faults import MitigationLog, StepTimer
+from repro.dist.faults import HeartbeatMonitor, MitigationLog, StepTimer
 from repro.models.api import get_model
 from repro.optim.optimizer import make_optimizer
 from repro.train.state import init_state
@@ -41,6 +41,12 @@ class TrainConfig:
     straggler_factor: float = 3.0
     bg_step_fn: Optional[Callable] = None  # multiplexed background work
     multiplex: MultiplexConfig = field(default_factory=MultiplexConfig)
+    # elastic re-planning: when set, failures are reported to the
+    # coordinator (which re-plans the foreground job on the surviving
+    # power-of-two subset) and each step beats the heartbeat monitor
+    coordinator: Optional[Any] = None  # ClusterCoordinator
+    heartbeat: Optional[HeartbeatMonitor] = None
+    worker_id: int = 0
 
 
 @dataclass
@@ -89,6 +95,7 @@ def train(
         failures = 0
         step = start_step
         inflight_bg = 0
+        flagged_stragglers: set = set()
         while step < tc.steps:
             try:
                 if fault_injector is not None:
@@ -113,6 +120,13 @@ def train(
                 report.step_times.append(dt)
                 step += 1
                 report.steps_done += 1
+                if tc.heartbeat is not None:
+                    tc.heartbeat.beat(tc.worker_id, step)
+                    lagging = set(tc.heartbeat.stragglers())
+                    for w in sorted(lagging - flagged_stragglers):
+                        report.mitigations.log("straggler_worker", step=step,
+                                               worker=w)
+                    flagged_stragglers = lagging  # recovered workers re-arm
                 if tc.ckpt_dir and step % tc.ckpt_every == 0:
                     ckpt_lib.save(tc.ckpt_dir, state, step, keep=tc.keep,
                                   extra_meta={"data": data.state()},
@@ -122,6 +136,16 @@ def train(
                 report.mitigations.log("failure", step=step, err=repr(e)[:200])
                 if failures > tc.max_failures:
                     raise
+                # fail-stop semantics (paper §3.2): a wired coordinator
+                # treats a step failure as loss of this worker's device.
+                # Report it once — repeats of the same worker would only
+                # re-run an identical planner search.
+                if (tc.coordinator is not None
+                        and tc.worker_id in tc.coordinator.healthy):
+                    new_plan = tc.coordinator.handle_failure(tc.worker_id)
+                    if new_plan is not None:
+                        report.mitigations.log("replan", step=step,
+                                               gpus=new_plan.num_gpus)
                 # restart from last checkpoint (or fresh if none)
                 if tc.ckpt_dir and ckpt_lib.latest_step(tc.ckpt_dir) is not None:
                     state, meta = ckpt_lib.restore(tc.ckpt_dir, fresh_state(),

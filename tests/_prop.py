@@ -1,0 +1,78 @@
+"""Thin fallback for ``hypothesis`` when it is not installed.
+
+The property-test modules import ``given/settings/strategies`` from
+``hypothesis`` when available and from here otherwise.  This shim replays a
+fixed number of deterministic pseudo-random examples per property (seeded
+``random.Random``), so tier-1 collection and the properties' invariants
+still run — just without shrinking or coverage-guided generation.
+"""
+from __future__ import annotations
+
+import functools
+import inspect
+import random
+import sys
+
+N_EXAMPLES = 25
+
+
+class _Strategy:
+    def __init__(self, draw):
+        self._draw = draw
+
+    def draw(self, rnd: random.Random):
+        return self._draw(rnd)
+
+
+def integers(min_value, max_value):
+    return _Strategy(lambda r: r.randint(min_value, max_value))
+
+
+def floats(min_value, max_value):
+    # log-uniform across wide ranges (hypothesis-ish coverage of magnitudes)
+    import math
+
+    lo, hi = math.log(min_value), math.log(max_value)
+    return _Strategy(lambda r: math.exp(r.uniform(lo, hi)))
+
+
+def sampled_from(elements):
+    elements = list(elements)
+    return _Strategy(lambda r: r.choice(elements))
+
+
+def lists(elements, min_size=0, max_size=10):
+    return _Strategy(
+        lambda r: [elements.draw(r) for _ in range(r.randint(min_size, max_size))]
+    )
+
+
+def builds(target, *args):
+    return _Strategy(lambda r: target(*[a.draw(r) for a in args]))
+
+
+def settings(**_kwargs):
+    def deco(fn):
+        return fn
+
+    return deco
+
+
+def given(*strategies_):
+    def deco(fn):
+        @functools.wraps(fn)
+        def run():
+            rnd = random.Random(0)
+            for _ in range(N_EXAMPLES):
+                fn(*[s.draw(rnd) for s in strategies_])
+
+        # pytest must not mistake the property's params for fixtures
+        del run.__wrapped__
+        run.__signature__ = inspect.Signature()
+        return run
+
+    return deco
+
+
+# allow `from _prop import strategies as st`
+strategies = sys.modules[__name__]

@@ -4,6 +4,9 @@ import sys
 # Tests must see the real (1-device) platform; the dry-run sets its own
 # XLA_FLAGS in its subprocesses. Never set device-count flags here.
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+# tests/ itself, so property modules can fall back to the _prop shim when
+# hypothesis is not installed
+sys.path.insert(0, os.path.dirname(__file__))
 
 import pytest  # noqa: E402
 

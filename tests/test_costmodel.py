@@ -1,6 +1,9 @@
 """Cost model (paper §4.1) unit + property tests."""
 import pytest
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # tier-1 must collect without hypothesis
+    from _prop import given, settings, strategies as st
 
 from repro.core.costmodel import (
     A100,

@@ -2,7 +2,10 @@
 import math
 
 import pytest
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # tier-1 must collect without hypothesis
+    from _prop import given, settings, strategies as st
 
 from repro.configs import TRAIN_4K, get_config
 from repro.configs.vgg16 import CONFIG as VCFG

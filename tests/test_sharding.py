@@ -2,7 +2,10 @@
 import jax
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # tier-1 must collect without hypothesis
+    from _prop import given, settings, strategies as st
 from jax.sharding import PartitionSpec as P
 
 from repro.configs import DECODE_32K, LONG_500K, TRAIN_4K, get_config
