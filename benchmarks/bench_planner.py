@@ -4,9 +4,26 @@ Paper (single-threaded Python, powers-of-two scales):
     VGG-16:           0.01 s @ 8     0.05 s @ 1024
     WideResNet-101-2: 0.02 s @ 8     0.11 s @ 1024
     Inception-v3:     0.22 s @ 8     3.23 s @ 1024
+
+This repo plans each model with both engines — the pure-Python reference DP
+(``engine="reference"``, the paper's formulation) and the vectorized matrix
+DP (default) — and reports the speedup.  The vectorized win concentrates
+exactly where the paper's search times blow up: block-rich DAGs, where the
+reference pays O(S²) entry-pinned searches per branch per block while the
+matrix DP plans all entries at once (20-30× at 1024 devices on the
+Inception-class graph).  On pure chains both engines are already
+millisecond-fast and numpy overhead roughly breaks even.
+
+``--smoke --record`` appends the 1024-device Inception-class measurement to
+BENCH_planner.json, the repo's recorded search-time trajectory; CI fails
+the run if the vectorized path is not faster than the reference on that
+smoke graph, or if the two engines' plans diverge.
 """
 from __future__ import annotations
 
+import json
+import os
+import sys
 import time
 
 from repro.configs.vgg16 import CONFIG as VCFG
@@ -19,15 +36,27 @@ from repro.models.graph import (
     build_wrn_graph,
 )
 
+BENCH_FILE = os.path.join(os.path.dirname(__file__), "..", "BENCH_planner.json")
 
-def _timed(graph, G, repeats=3):
+# the recorded trajectory point: Inception-class DAG at 1024 simulated devices
+SMOKE_GRAPH = lambda: build_inception_like_graph(32, n_blocks=3)
+SMOKE_G = 1024
+
+
+def _clear_caches():
+    graph_reduce._TABLE_CACHE.clear()
+    graph_reduce._MATRIX_CACHE.clear()
+
+
+def _timed(graph, G, engine="vectorized", repeats=3):
     best = float("inf")
+    bp = None
     for _ in range(repeats):
-        graph_reduce._TABLE_CACHE.clear()  # search must pay reduction cost
+        _clear_caches()  # search must pay reduction cost
         t0 = time.perf_counter()
-        plan(graph, G, amp_limit=2.0, hw=A100)
+        bp = plan(graph, G, amp_limit=2.0, hw=A100, engine=engine)
         best = min(best, time.perf_counter() - t0)
-    return best
+    return best, bp
 
 
 def run():
@@ -44,21 +73,25 @@ def run():
     }
     for name, builder in models.items():
         g = builder()
-        t8 = _timed(g, 8)
-        t1024 = _timed(g, 1024, repeats=1)
+        t8, _ = _timed(g, 8)
+        t1024, _ = _timed(g, 1024, repeats=1)
+        tref, _ = _timed(g, 1024, engine="reference", repeats=1)
         p8, p1024 = paper[name]
         rows.append({
             "name": f"table3/{name}",
             "us_per_call": t1024 * 1e6,
             "derived": (f"search@8={t8:.3f}s (paper {p8}s) "
                         f"search@1024={t1024:.3f}s (paper {p1024}s) "
-                        f"growth={t1024 / max(t8, 1e-9):.1f}x (paper 5-15x)"),
+                        f"reference@1024={tref:.3f}s "
+                        f"vec_speedup={tref / max(t1024, 1e-9):.1f}x"),
         })
     return rows
 
 
-def smoke():
-    """CI sanity: one quick plan, asserting the core invariants."""
+def smoke(record: bool = False) -> int:
+    """CI sanity: quick plan invariants + the vectorized-vs-reference race on
+    the 1024-device Inception-class smoke graph.  Returns a shell exit code;
+    nonzero when the vectorized path loses to the reference."""
     g = build_vgg_graph(VCFG, 32)
     t0 = time.perf_counter()
     bp = plan(g, 8, amp_limit=2.0, hw=A100)
@@ -67,16 +100,72 @@ def smoke():
     print(f"smoke ok: vgg16@8 iter={bp.total_time * 1e3:.3f} ms "
           f"amp={bp.amplification:.2f} search={dt:.3f}s")
 
+    sg = SMOKE_GRAPH()
+    t_vec, bp_vec = _timed(sg, SMOKE_G, engine="vectorized", repeats=3)
+    t_ref, bp_ref = _timed(sg, SMOKE_G, engine="reference", repeats=1)
+    speedup = t_ref / max(t_vec, 1e-9)
+    match = (
+        bp_vec.total_time == bp_ref.total_time
+        and [l.gpus for l in bp_vec.layers] == [l.gpus for l in bp_ref.layers]
+    )
+    print(f"smoke inception3@{SMOKE_G}: vec={t_vec:.4f}s ref={t_ref:.4f}s "
+          f"speedup={speedup:.1f}x plan_cost={bp_vec.total_time * 1e3:.3f}ms "
+          f"bit_identical={match}")
+    if record:
+        import datetime
+        import subprocess
+
+        try:
+            sha = subprocess.run(
+                ["git", "rev-parse", "--short", "HEAD"],
+                capture_output=True, text=True, timeout=10,
+                cwd=os.path.dirname(os.path.abspath(__file__)),
+            ).stdout.strip() or None
+        except (OSError, subprocess.SubprocessError):
+            sha = None
+        entry = {
+            "date": datetime.datetime.now(datetime.timezone.utc).isoformat(
+                timespec="seconds"
+            ),
+            "commit": sha,
+            "config": f"inception3-n3@{SMOKE_G}",
+            "search_s_vectorized": t_vec,
+            "search_s_reference": t_ref,
+            "speedup": speedup,
+            "plan_total_time_s": bp_vec.total_time,
+            "plan_amplification": bp_vec.amplification,
+            "bit_identical": match,
+        }
+        history = []
+        if os.path.exists(BENCH_FILE):
+            with open(BENCH_FILE) as f:
+                history = json.load(f)
+        history.append(entry)
+        with open(BENCH_FILE, "w") as f:
+            json.dump(history, f, indent=2)
+            f.write("\n")
+        print(f"recorded -> {os.path.normpath(BENCH_FILE)}")
+    if not match:
+        print("FAIL: vectorized plan diverges from reference", file=sys.stderr)
+        return 1
+    if t_vec >= t_ref:
+        print("FAIL: vectorized search slower than reference on smoke graph",
+              file=sys.stderr)
+        return 1
+    return 0
+
 
 if __name__ == "__main__":
     import argparse
 
     ap = argparse.ArgumentParser()
     ap.add_argument("--smoke", action="store_true",
-                    help="single quick plan + invariant check (CI)")
+                    help="quick plan + invariants + vec-vs-ref race (CI)")
+    ap.add_argument("--record", action="store_true",
+                    help="with --smoke: append the measurement to BENCH_planner.json")
     args = ap.parse_args()
     if args.smoke:
-        smoke()
+        sys.exit(smoke(record=args.record))
     else:
         for r in run():
             print(r["name"], r["derived"])

@@ -30,6 +30,49 @@ def main():
     bp = plan(build_lm_graph(get_config("zamba2-2.7b"), TRAIN_4K), G, amp_limit=2.0)
     print(bp.summary())
 
+    dag_demo()
+    encdec_demo()
+
+
+def dag_demo():
+    """Branch-parallel DAG placement: Inception-style blocks get per-branch
+    device ranges (critical branch at [0, peak), parallel branches stacked
+    onto the block's idle devices)."""
+    from repro.core.planner import plan
+    from repro.models.graph import build_inception_like_graph
+
+    print("\nDAG placement for an Inception-style graph @ 64 devices:")
+    bp = plan(build_inception_like_graph(32, n_blocks=3), 64, amp_limit=2.0)
+    for name, placements in sorted(bp.block_details.items()):
+        print(f"  {name}:")
+        for p in placements:
+            tag = "critical" if p.critical else ("parallel" if p.parallel else "sequential")
+            print(f"    branch {p.branch} [{tag:>10s}] devices "
+                  f"[{p.device_start},{p.device_end}) scales={p.scales} "
+                  f"t={p.time*1e6:.1f}us")
+
+
+def encdec_demo():
+    """Two-chain DAG: encoder + decoder joined by a resharding cross-edge."""
+    import dataclasses
+
+    from repro.configs import TRAIN_4K, get_config
+    from repro.core.planner import plan
+    from repro.models.graph import build_encdec_graph
+
+    cfg = get_config("seamless-m4t-large-v2")
+    shape = dataclasses.replace(TRAIN_4K, seq_len=1024, global_batch=16, name="demo")
+    eg = build_encdec_graph(cfg, shape)
+    bp = plan(eg, 64, amp_limit=2.0)
+    j = bp.block_details["encdec_join"]
+    print(f"\nenc-dec cross-edge plan for {cfg.name} @ 64 devices:")
+    print(f"  encoder exits at g={j['encoder_exit_gpus']}, decoder enters at "
+          f"g={j['decoder_entry_gpus']}, reshard join "
+          f"{j['reshard_time']*1e6:.1f}us over "
+          f"{j['cross_act_bytes']/2**20:.1f} MiB of encoder memory")
+    print(f"  iter={bp.total_time*1e3:.2f} ms amp={bp.amplification:.2f} "
+          f"stages={len(bp.stages())}")
+
 
 if __name__ == "__main__":
     main()

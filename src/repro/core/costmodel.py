@@ -24,6 +24,8 @@ from __future__ import annotations
 import math
 from dataclasses import dataclass
 
+import numpy as np
+
 from repro.models.graph import LayerNode
 
 
@@ -108,3 +110,55 @@ def allreduce_time(bytes_total: float, n: int, hw: Hardware, bw: float = 0.0) ->
         return 0.0
     bw = bw or hw.chip_bw
     return 2.0 * (n - 1) / n * bytes_total / bw + hw.prop_delay * math.log2(n)
+
+
+# ---------------------------------------------------------------------------
+# Batched cost evaluation over scale vectors (vectorized planner hot path).
+#
+# Each *_batch function evaluates the scalar formula above elementwise in
+# float64, in the same operation order, so values are bit-identical to the
+# scalar path — a requirement of the differential test harness
+# (tests/test_planner_diff.py), which pins vectorized == reference exactly.
+# ---------------------------------------------------------------------------
+
+
+def comp_time_batch(node: LayerNode, scales, hw: Hardware, bwd: bool = True) -> np.ndarray:
+    """``comp_time`` evaluated at a vector of scales; returns float64 array."""
+    g = np.asarray(scales, dtype=np.float64)
+    g_eff = np.minimum(g, float(max(node.parallel_units, 1)))
+    mult = 1.0 + (node.bwd_mult if bwd else 0.0)
+    flops = node.flops * mult / g_eff
+    u = np.maximum(node.parallel_units / g_eff, 1e-9)
+    eff = u / (u + 1.0)
+    t_flops = flops / (hw.peak_flops * eff)
+    bytes_hbm = (node.param_bytes + 2.0 * node.act_out_bytes / g_eff) * (
+        1.5 if bwd else 1.0
+    )
+    t_mem = bytes_hbm / hw.hbm_bw
+    t_seq = node.seq_flops * mult / hw.peak_flops
+    passes = 2 if bwd else 1
+    return np.maximum(t_flops, t_mem) + t_seq + passes * hw.kernel_overhead
+
+
+def sync_time_batch(param_bytes: float, scales, hw: Hardware) -> np.ndarray:
+    """``sync_time`` evaluated at a vector of replica counts.
+
+    Scales are powers of two, so ``log2`` is exact and matches math.log2.
+    """
+    g = np.asarray(scales, dtype=np.float64)
+    with np.errstate(divide="ignore", invalid="ignore"):
+        t = 2.0 * (g - 1.0) / g * param_bytes / hw.chip_bw
+        out = t + hw.prop_delay * np.log2(g)
+    return np.where(g <= 1.0, 0.0, out)
+
+
+def comm_matrix(act_bytes: float, src_scales, dst_scales, hw: Hardware) -> np.ndarray:
+    """``comm_time`` for every (src, dst) pair: the planner's per-edge S×S
+    transition-cost matrix, indexed [src][dst]."""
+    g = np.asarray(src_scales, dtype=np.float64)[:, None]
+    h = np.asarray(dst_scales, dtype=np.float64)[None, :]
+    lo = np.minimum(g, h)
+    hi = np.maximum(g, h)
+    payload_per_dev = act_bytes * (1.0 / lo - 1.0 / hi)
+    t = payload_per_dev / hw.chip_bw + hw.prop_delay
+    return np.where(g == h, 0.0, 2.0 * t)

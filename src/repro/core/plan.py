@@ -48,6 +48,35 @@ class GapWindow:
 
 
 @dataclass(frozen=True)
+class BranchPlacement:
+    """Placement of one ParallelBlock branch inside the block's device window.
+
+    The critical branch occupies devices [0, gpus); branches that run
+    *parallel* to it are stacked onto disjoint ranges above it (the idle
+    devices of the block's GapWindow); *sequential* branches reuse the
+    critical branch's range after it finishes.  ``scales`` is the backtraced
+    per-layer device count along the branch's top-level chain.
+    """
+
+    block: str
+    branch: int
+    critical: bool
+    parallel: bool         # placed on disjoint devices concurrently
+    time: float
+    gpus: int              # peak devices used by this branch
+    device_start: int
+    device_end: int        # exclusive
+    scales: Tuple[int, ...]
+    demoted: bool = False  # reduction decided parallel, but the gap window
+                           # was full — the planned block time is optimistic
+                           # by up to this branch's ``time``
+
+    @property
+    def devices(self) -> Tuple[int, int]:
+        return (self.device_start, self.device_end)
+
+
+@dataclass(frozen=True)
 class BurstPlan:
     layers: Tuple[LayerPlan, ...]
     num_gpus: int
@@ -94,6 +123,17 @@ class BurstPlan:
 
     def idle_gpu_sec(self) -> float:
         return sum(g.duration * g.free_gpus for g in self.gaps())
+
+    def placement_slack(self) -> float:
+        """Total time of branches the reduction decided to run in parallel
+        but the placement had to demote (gap window full).  ``total_time``
+        is optimistic by up to this much; 0.0 when every parallel decision
+        was physically placeable."""
+        slack = 0.0
+        for v in self.block_details.values():
+            if isinstance(v, tuple):
+                slack += sum(p.time for p in v if getattr(p, "demoted", False))
+        return slack
 
     def summary(self) -> str:
         st = self.stages()

@@ -16,7 +16,12 @@ import time
 from dataclasses import dataclass, field
 from typing import Dict, List, Sequence
 
-from repro.core.costmodel import Hardware, comp_time, sync_time
+from repro.core.costmodel import (
+    Hardware,
+    comp_time,
+    comp_time_batch,
+    sync_time_batch,
+)
 from repro.models.graph import LayerNode, ParallelBlock
 
 
@@ -47,9 +52,16 @@ class CostedBlock:
 
 
 def profile_node(node: LayerNode, scales: Sequence[int], hw: Hardware) -> CostedLayer:
-    comp = {g: comp_time(node, g, hw) for g in scales}
+    # Batched over the scale vector (costmodel.*_batch): one numpy evaluation
+    # per layer instead of one Python call per (layer, scale); bit-identical
+    # to the scalar formulas.
     sg = max(getattr(node, "sync_groups", 1), 1)
-    sync = {g: sync_time(node.param_bytes / sg, max(g // sg, 1), hw) for g in scales}
+    comp_v = comp_time_batch(node, list(scales), hw)
+    sync_v = sync_time_batch(
+        node.param_bytes / sg, [max(g // sg, 1) for g in scales], hw
+    )
+    comp = {g: float(c) for g, c in zip(scales, comp_v)}
+    sync = {g: float(s) for g, s in zip(scales, sync_v)}
     return CostedLayer(
         name=node.name,
         comp=comp,

@@ -39,6 +39,22 @@ class ParallelBlock:
     branches: tuple  # tuple of chains; each chain is a tuple of elements
 
 
+@dataclass(frozen=True)
+class EncDecGraph:
+    """Two-chain DAG: encoder chain + decoder chain joined by a cross-edge.
+
+    The decoder's cross-attention consumes the encoder's output memory, so
+    the planner (core/planner.plan_encdec) plans the two chains jointly: the
+    encoder's exit scale becomes the decoder's pinned entry scale and the
+    cross-edge pays a resharding join of ``cross_act_bytes``.
+    """
+
+    name: str
+    encoder: tuple  # LayerGraph chain
+    decoder: tuple  # LayerGraph chain
+    cross_act_bytes: float
+
+
 GraphElem = Union[LayerNode, ParallelBlock]
 LayerGraph = List[GraphElem]  # a chain
 
@@ -169,6 +185,102 @@ def build_lm_graph(cfg: ModelConfig, shape: ShapeConfig, tp: int = 16) -> LayerG
         )
     )
     return g
+
+
+# ---------------------------------------------------------------------------
+# Builders — encoder-decoder two-chain DAG (seamless-m4t class, encdec.py)
+# ---------------------------------------------------------------------------
+
+
+def build_encdec_graph(cfg: ModelConfig, shape: ShapeConfig, tp: int = 16) -> EncDecGraph:
+    """Two-chain DAG for an encoder-decoder LM (models/encdec.py shapes):
+    encoder over ``seq_len`` frames, decoder over ``seq_len // 4`` tokens
+    (encdec.DEC_RATIO), cross-attention joining them.  The cross-edge payload
+    is the encoder output memory each decoder device must hold."""
+    dec_ratio = 4  # encdec.DEC_RATIO; literal avoids importing jax here
+    B = shape.global_batch
+    S_enc = shape.seq_len
+    S_dec = max(S_enc // dec_ratio, 1)
+    D, Hh, hd = cfg.d_model, cfg.num_heads, cfg.d_head
+    T_e, T_d = B * S_enc, B * S_dec
+    act_e = T_e * D * _BYTES
+    act_d = T_d * D * _BYTES
+
+    enc: List[LayerNode] = [
+        LayerNode(
+            "frontend_proj", flops=2.0 * T_e * D * D, param_bytes=D * D * 4,
+            act_out_bytes=act_e, parallel_units=T_e, kind="embed", sync_groups=tp,
+        )
+    ]
+    attn_pb = (D * (cfg.attn_dim + 2 * cfg.kv_dim) + cfg.attn_dim * D) * 4
+    for i in range(cfg.num_encoder_layers):
+        proj = 2.0 * T_e * D * (cfg.attn_dim + 2 * cfg.kv_dim) + 2.0 * T_e * cfg.attn_dim * D
+        score = 2.0 * B * Hh * hd * S_enc * S_enc  # bidirectional
+        enc.append(
+            LayerNode(
+                f"enc_attn_{i}", flops=proj + score, param_bytes=attn_pb,
+                act_out_bytes=act_e, parallel_units=T_e, kind="attention",
+                sync_groups=tp,
+            )
+        )
+        enc.append(
+            LayerNode(
+                f"enc_mlp_{i}", flops=6.0 * T_e * D * cfg.d_ff,
+                param_bytes=3 * D * cfg.d_ff * 4, act_out_bytes=act_e,
+                parallel_units=T_e, kind="mlp", sync_groups=tp,
+            )
+        )
+
+    dec: List[LayerNode] = [
+        LayerNode(
+            "embed", flops=2.0 * T_d * D, param_bytes=cfg.padded_vocab * D * 4,
+            act_out_bytes=act_d, parallel_units=T_d, kind="embed", sync_groups=tp,
+        )
+    ]
+    for i in range(cfg.num_layers):
+        proj = 2.0 * T_d * D * (cfg.attn_dim + 2 * cfg.kv_dim) + 2.0 * T_d * cfg.attn_dim * D
+        score = 2.0 * B * Hh * hd * S_dec * S_dec
+        dec.append(
+            LayerNode(
+                f"dec_self_attn_{i}", flops=proj + score, param_bytes=attn_pb,
+                act_out_bytes=act_d, parallel_units=T_d, kind="attention",
+                sync_groups=tp,
+            )
+        )
+        # cross-attention: q from T_d decoder tokens, k/v projected from the
+        # T_e-frame encoder memory, scores over S_dec × S_enc
+        x_proj = (
+            2.0 * T_d * D * cfg.attn_dim
+            + 2.0 * T_e * D * 2 * cfg.kv_dim
+            + 2.0 * T_d * cfg.attn_dim * D
+        )
+        x_score = 2.0 * B * Hh * hd * S_dec * S_enc * 2  # qk + pv
+        dec.append(
+            LayerNode(
+                f"dec_cross_attn_{i}", flops=x_proj + x_score, param_bytes=attn_pb,
+                act_out_bytes=act_d, parallel_units=T_d, kind="attention",
+                sync_groups=tp,
+            )
+        )
+        dec.append(
+            LayerNode(
+                f"dec_mlp_{i}", flops=6.0 * T_d * D * cfg.d_ff,
+                param_bytes=3 * D * cfg.d_ff * 4, act_out_bytes=act_d,
+                parallel_units=T_d, kind="mlp", sync_groups=tp,
+            )
+        )
+    dec.append(
+        LayerNode(
+            "lm_head", flops=2.0 * T_d * D * cfg.padded_vocab,
+            param_bytes=cfg.padded_vocab * D * 4,
+            act_out_bytes=T_d * cfg.padded_vocab * _BYTES,
+            parallel_units=T_d, kind="head", sync_groups=tp,
+        )
+    )
+    return EncDecGraph(
+        name=cfg.name, encoder=tuple(enc), decoder=tuple(dec),
+        cross_act_bytes=float(act_e),
+    )
 
 
 # ---------------------------------------------------------------------------

@@ -62,3 +62,97 @@ def test_inception_like_graph_plans():
     # blocks are represented in the plan (reduced as part of transitions)
     names = [l.name for l in bp.layers]
     assert "stem" in names and "classifier" in names
+
+
+def test_block_transition_surfaces_critical_branch():
+    """BlockTransition.critical names the longest branch; the new placement
+    code keys device-range assignment off it."""
+    chain = profile_graph(_block_graph(), 8, HW)
+    block = chain[1]
+    scales = powers_of_two(8)
+    bt = block_transition(block, 8, 8, scales, 2.0, HW, entry_act_bytes=1e6)
+    assert bt.critical == max(
+        range(len(bt.branches)), key=lambda i: bt.branches[i].time
+    )
+    assert not bt.branches[bt.critical].parallel
+
+    # a decisively slow branch must be the critical one
+    heavy = profile_graph(
+        [ParallelBlock("hv", ((_node("fast"),), (_node("slow", flops=1e13),))),
+         _node("tail")],
+        8, HW,
+    )[0]
+    bt2 = block_transition(heavy, 8, 8, scales, 2.0, HW, entry_act_bytes=1e6)
+    assert bt2.critical == 1
+    assert bt2.branches[1].time > bt2.branches[0].time
+
+
+def test_noncritical_branch_parallel_only_when_free_and_under_amp():
+    """A non-critical branch is marked parallel=True only when it neither
+    extends the block's time nor pushes gpu-sec amplification past the
+    limit; a tight amp limit forces it sequential (extending the block)."""
+    chain = profile_graph(_block_graph(), 8, HW)
+    block = chain[1]
+    scales = powers_of_two(8)
+
+    generous = block_transition(block, 8, 8, scales, 1e9, HW, entry_act_bytes=1e6)
+    crit_t = generous.branches[generous.critical].time
+    for i, br in enumerate(generous.branches):
+        if i == generous.critical:
+            continue
+        # with no amp pressure, every non-critical branch fits in parallel
+        assert br.parallel and br.time <= crit_t + 1e-15
+    assert generous.time == pytest.approx(crit_t, rel=1e-12)
+
+    tight = block_transition(block, 8, 8, scales, 1e-6, HW, entry_act_bytes=1e6)
+    noncrit = [b for i, b in enumerate(tight.branches) if i != tight.critical]
+    assert all(not b.parallel for b in noncrit)  # amp budget exhausted
+    # sequential branches extend the block beyond the critical time
+    crit_t_tight = tight.branches[tight.critical].time
+    assert tight.time == pytest.approx(
+        crit_t_tight + sum(b.time for b in noncrit), rel=1e-9
+    )
+
+
+def test_block_matrix_placements_device_ranges():
+    """The vectorized reduction's placements: parallel branches get disjoint
+    device ranges above the critical branch inside the block's gap window."""
+    from repro.core.graph_reduce import block_placements
+
+    chain = profile_graph(_block_graph(), 8, HW)
+    block = chain[1]
+    scales = powers_of_two(8)
+    n = len(scales)
+    placements = block_placements(block, n - 1, n - 1, scales, 1e9, HW, 1e6, 8)
+    assert len(placements) == 2
+    crit = [p for p in placements if p.critical]
+    assert len(crit) == 1
+    assert crit[0].device_start == 0 and crit[0].device_end == crit[0].gpus
+    for p in placements:
+        if p.parallel:
+            assert p.device_start >= crit[0].device_end  # disjoint from critical
+        assert len(p.scales) >= 1 and p.gpus == max(p.scales)
+        assert p.device_end <= 8 or not p.parallel
+
+
+def test_placement_demotion_when_gap_window_full():
+    """A branch the reduction decided to run in parallel is demoted (and
+    flagged) when the machine has no idle devices left for it; with enough
+    devices the same branch is genuinely placed in parallel."""
+    from repro.core.graph_reduce import block_placements
+
+    chain = profile_graph(_block_graph(), 8, HW)
+    block = chain[1]
+    scales = powers_of_two(8)
+    n = len(scales)
+    # both branches peak at 8 devices in the (8, 8) cell under a loose limit
+    small = block_placements(block, n - 1, n - 1, scales, 1e9, HW, 1e6, 8)
+    noncrit_small = [p for p in small if not p.critical]
+    big = block_placements(block, n - 1, n - 1, scales, 1e9, HW, 1e6, 32)
+    noncrit_big = [p for p in big if not p.critical]
+    assert any(p.parallel for p in noncrit_big)  # fits on the 32-dev machine
+    demoted = [p for p in noncrit_small if p.demoted]
+    if any(p.gpus + max(c.gpus for c in small if c.critical) > 8
+           for p in noncrit_small):
+        assert demoted, small  # could not fit -> must be flagged
+        assert all(not p.parallel and p.device_start == 0 for p in demoted)

@@ -5,14 +5,22 @@ seed's unit tests): the burst plan never loses to the data-parallel
 baseline, amplification limits hold per layer, and a failure -> join cycle
 through the coordinator restores the original plan bit-for-bit.
 """
+import dataclasses
+
 import pytest
 
 from repro.configs import TRAIN_4K, get_config
 from repro.configs.vgg16 import CONFIG as VCFG
 from repro.core.coordinator import ClusterCoordinator, Job
 from repro.core.costmodel import A100
+from repro.core.plan import BranchPlacement
 from repro.core.planner import plan, plan_data_parallel
-from repro.models.graph import build_lm_graph, build_vgg_graph
+from repro.models.graph import (
+    build_encdec_graph,
+    build_inception_like_graph,
+    build_lm_graph,
+    build_vgg_graph,
+)
 
 AMP_LIMIT = 2.0
 
@@ -46,6 +54,80 @@ def test_golden_vgg_burst_strictly_beats_dp_at_8():
     dp = plan_data_parallel(g, 8, hw=A100)
     assert bp.total_time < dp.total_time
     assert bp.layers[-1].gpus < bp.layers[0].gpus  # late layers scale down
+
+
+# ---------------------------------------------------------------------------
+# Golden DAG plans: branch-parallel placement must not silently regress
+# ---------------------------------------------------------------------------
+
+
+def test_golden_inception_dag_placements():
+    """Inception-style DAG at 8 devices: every block plans per-branch device
+    ranges — exactly one critical branch at [0, peak), parallel branches on
+    disjoint ranges above it, sequential branches reusing [0, peak)."""
+    g = build_inception_like_graph(32, n_blocks=3)
+    bp = plan(g, 8, amp_limit=AMP_LIMIT, hw=A100)
+    blocks = {k: v for k, v in bp.block_details.items() if k.startswith("block")}
+    assert sorted(blocks) == ["block0", "block1", "block2"]
+    for name, placements in blocks.items():
+        assert all(isinstance(p, BranchPlacement) for p in placements)
+        assert len(placements) == 4  # the builder's 4 branches
+        crits = [p for p in placements if p.critical]
+        assert len(crits) == 1 and not crits[0].parallel
+        assert crits[0].device_start == 0 and crits[0].device_end == crits[0].gpus
+        # critical branch is the slowest
+        assert crits[0].time == max(p.time for p in placements)
+        occupied = [(crits[0].device_start, crits[0].device_end)]
+        for p in placements:
+            assert p.gpus >= 1 and p.device_end - p.device_start == p.gpus
+            assert len(p.scales) >= 1 and all(s >= 1 for s in p.scales)
+            assert p.gpus == max(p.scales)
+            if p.parallel:
+                # disjoint from the critical branch and every other parallel one
+                for lo, hi in occupied:
+                    assert p.device_end <= lo or p.device_start >= hi, (name, p)
+                occupied.append((p.device_start, p.device_end))
+            elif not p.critical:
+                assert p.device_start == 0  # sequential: reuses critical range
+    # genuine branch parallelism is planned (not everything serialized)
+    assert any(p.parallel for ps in blocks.values() for p in ps)
+    # placements stay inside the machine, with no demoted-parallel slack
+    assert all(p.device_end <= 8 for ps in blocks.values() for p in ps)
+    assert bp.placement_slack() == 0.0
+    # the plan's foreground layers still cover stem + classifier
+    names = [l.name for l in bp.layers]
+    assert names[0] == "stem" and names[-1] == "classifier"
+    # golden: plan beats flattened DP and respects the amp limit
+    dp = plan_data_parallel(g, 8, hw=A100)
+    assert bp.total_time <= dp.total_time * (1 + 1e-9)
+    assert bp.amplification <= AMP_LIMIT + 1e-9
+
+
+def test_golden_encdec_cross_edge_plan():
+    """Enc-dec two-chain DAG: the resharding join is planned and recorded,
+    and the vectorized plan matches the pure-Python oracle bit-for-bit."""
+    cfg = get_config("seamless-m4t-large-v2").reduced()
+    shape = dataclasses.replace(TRAIN_4K, seq_len=256, global_batch=8, name="encdec-reg")
+    eg = build_encdec_graph(cfg, shape)
+    bp = plan(eg, 16, amp_limit=AMP_LIMIT, hw=A100)
+    ref = plan(eg, 16, amp_limit=AMP_LIMIT, hw=A100, engine="reference")
+    assert [l.gpus for l in bp.layers] == [l.gpus for l in ref.layers]
+    assert bp.total_time == ref.total_time  # bit-for-bit
+    join = bp.block_details["encdec_join"]
+    n_enc = join["encoder_layers"]
+    assert n_enc == len(eg.encoder) and len(bp.layers) == n_enc + len(eg.decoder)
+    # join bookkeeping is consistent with the emitted layers
+    assert join["encoder_exit_gpus"] == bp.layers[n_enc - 1].gpus
+    assert join["decoder_entry_gpus"] == bp.layers[n_enc].gpus
+    assert bp.layers[n_enc].comm_in == join["reshard_time"]
+    if join["encoder_exit_gpus"] != join["decoder_entry_gpus"]:
+        assert join["reshard_time"] > 0.0
+    assert bp.amplification <= AMP_LIMIT + 1e-9
+    # the DP baseline (both chains back-to-back at full scale) is a feasible
+    # point of the unconstrained search, so it can never win
+    bp_free = plan(eg, 16, amp_limit=1e9, hw=A100)
+    dp = plan_data_parallel(eg, 16, hw=A100)
+    assert bp_free.total_time <= dp.total_time * (1 + 1e-9)
 
 
 def test_coordinator_failure_join_roundtrip():

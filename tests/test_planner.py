@@ -131,3 +131,79 @@ def test_property_unconstrained_beats_dp(nodes):
     bp = plan(nodes, 8, amp_limit=1e9, hw=HW)
     dp = _dp_plan(nodes, 8, HW)
     assert bp.total_time <= dp.total_time * (1 + 1e-9)
+
+
+# ---------------------------------------------------------------------------
+# edge cases: planner invariants at the boundaries (both engines)
+# ---------------------------------------------------------------------------
+
+ENGINES = ("vectorized", "reference")
+
+
+@pytest.mark.parametrize("engine", ENGINES)
+def test_amp_limit_binding_at_boundary(engine):
+    """The amp constraint is inclusive: re-planning with amp_limit set to
+    exactly the achieved max layer amplification reproduces the same plan;
+    nudging the limit below it forces a different (slower-or-equal) plan."""
+    g = _vgg_graph()
+    bp = plan(g, 8, amp_limit=2.0, hw=HW, engine=engine)
+    m = max(l.amp for l in bp.layers)
+    at_boundary = plan(g, 8, amp_limit=m, hw=HW, engine=engine)
+    assert [l.gpus for l in at_boundary.layers] == [l.gpus for l in bp.layers]
+    assert at_boundary.total_time == bp.total_time
+    below = plan(g, 8, amp_limit=m * (1 - 1e-9), hw=HW, engine=engine)
+    assert below.total_time >= bp.total_time - 1e-12
+    assert [l.gpus for l in below.layers] != [l.gpus for l in bp.layers] or (
+        below.total_time == bp.total_time
+    )
+
+
+def test_entry_scale_pinning():
+    """entry_scale pins the source feeding layer 0: the entry transition is
+    the reshard from that scale, identically in both engines."""
+    from repro.core.costmodel import comm_time
+    from repro.core.planner import search_linear, search_linear_reference
+    from repro.core.profiler import profile_graph
+
+    nodes = [
+        LayerNode(name=f"n{i}", flops=1e10, param_bytes=1e6, act_out_bytes=1e6,
+                  parallel_units=64)
+        for i in range(3)
+    ]
+    scales = powers_of_two(8)
+    chain = profile_graph(nodes, 8, HW)
+    eb = 5e6
+    ref = search_linear_reference(chain, scales, 2.0, HW, entry_scale=4,
+                                  entry_act_bytes=eb)
+    vec = search_linear(chain, scales, 2.0, HW, entry_scale=4, entry_act_bytes=eb)
+    for gi, g in enumerate(scales):
+        expected = comm_time(eb, 4, g, HW)
+        lc = chain[0].comp[g] + chain[0].sync[g]
+        assert ref.S[0][g] == expected + lc
+        assert ref.P[0][g] == 4
+        assert vec.S[0, 0, gi] == ref.S[0][g]
+        assert scales[vec.P[0, 0, gi]] == 4
+
+
+@pytest.mark.parametrize("engine", ENGINES)
+@pytest.mark.parametrize("G", [1, 8])
+def test_single_layer_graph(engine, G):
+    node = LayerNode(name="solo", flops=1e10, param_bytes=1e6, act_out_bytes=1e6,
+                     parallel_units=64)
+    bp = plan([node], G, amp_limit=2.0, hw=HW, engine=engine)
+    assert len(bp.layers) == 1
+    assert bp.layers[0].gpus in powers_of_two(G)
+    assert bp.layers[0].comm_in == 0.0
+    assert bp.total_time == bp.layers[0].time > 0
+    assert bp.amplification <= 2.0 + 1e-9
+
+
+@pytest.mark.parametrize("engine", ENGINES)
+def test_trailing_parallel_block_raises(engine):
+    from repro.models.graph import ParallelBlock
+
+    node = LayerNode(name="n", flops=1e10, param_bytes=1e6, act_out_bytes=1e6,
+                     parallel_units=64)
+    blk = ParallelBlock("blk", ((node,), (node,)))
+    with pytest.raises(ValueError, match="must not end with a ParallelBlock"):
+        plan([node, blk], 8, amp_limit=2.0, hw=HW, engine=engine)
