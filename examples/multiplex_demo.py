@@ -1,60 +1,68 @@
-"""Real fg/bg multiplexed execution: a foreground job's jitted stages
-interleave with paced background steps through the Collocator (the
-executable TPU-submesh path of paper §5).
+"""Real fg/bg multiplexed execution on disjoint submeshes: the foreground
+plan's jitted stages run on their device prefix while REAL background LM
+training steps are paced into the plan's gap submeshes through the
+Collocator (the executable path of paper §5).
 
     PYTHONPATH=src python examples/multiplex_demo.py
-"""
-import sys
-import time
 
+Forces 8 host devices so the gap submeshes are real device subsets.
+"""
+import os
+import sys
+
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
 sys.path.insert(0, "src")
 
 
 def main():
     import jax
+    import jax.numpy as jnp
+    from jax.sharding import NamedSharding, PartitionSpec as P
 
-    from repro.configs import get_config
     from repro.configs.vgg16 import CONFIG as VCFG
     from repro.core.costmodel import A100
     from repro.core.multiplex import Collocator, MultiplexConfig
     from repro.core.planner import plan
-    from repro.models import get_model, make_batch
     from repro.models.graph import build_vgg_graph
-    from repro.optim.optimizer import make_optimizer
-    from repro.train.state import init_state
-    from repro.train.step import make_train_step
+    from repro.train.step import bg_step_factory
 
     # foreground plan (VGG-16 @ 8 devices, the paper's setting)
     fg_plan = plan(build_vgg_graph(VCFG, 32), 8, amp_limit=1.5, hw=A100)
     print(fg_plan.summary())
 
-    # background job: a tiny LM training step
-    cfg = get_config("qwen2-1.5b").reduced()
-    api = get_model(cfg)
-    opt = make_optimizer(cfg)
-    state = {"v": init_state(jax.random.PRNGKey(0), api, opt)}
-    step = jax.jit(make_train_step(api, opt))
-    batch = make_batch(jax.random.PRNGKey(1), cfg, 2, 32)
-
-    def bg_step():
-        state["v"], m = step(state["v"], batch)
-        return m["loss"]
-
-    # foreground stages: stand-in compute kernels sized by the plan
-    k = jax.random.PRNGKey(2)
-    mats = jax.random.normal(k, (256, 256))
-    stage_fns = [
-        jax.jit(lambda m=mats: (m @ m).sum()) for _ in fg_plan.stages()
-    ]
-
     col = Collocator(fg_plan, MultiplexConfig(max_inflight=2))
     print("collocation schedule (stage -> bg steps):", col.schedule())
-    for it in range(3):
-        res = col.run_iteration(stage_fns, bg_step, time.perf_counter)
-        print(f"iter {it}: {res['iter_time']*1e3:.1f} ms "
-              f"(QoS bans: {sorted(col.monitor.banned) or 'none'})")
-    print("bg loss after multiplexed steps:",
-          float(jax.block_until_ready(bg_step())))
+    split = col.submeshes()
+    for si, (rng, mesh) in sorted(split.bg.items()):
+        print(f"  stage {si}: fg devices {split.stage_fg_range[si]} "
+              f"bg submesh devices [{rng[0]}, {rng[1]})")
+
+    # foreground stages: stand-in compute kernels on the stage's submesh
+    def make_fg_stage_fn(stage, mesh):
+        x = jax.device_put(jnp.full((256, 256), 0.01, jnp.float32),
+                           NamedSharding(mesh, P(None, None)))
+
+        @jax.jit
+        def f(x):
+            for _ in range(8):
+                x = jnp.tanh(x @ x) * 0.1 + 0.01
+            return x
+
+        return lambda: f(x)
+
+    # background job: a REAL tiny-LM training step jitted per gap submesh
+    # (each submesh gets its own independent state replica)
+    losses = []
+    make_bg_step_fn = bg_step_factory("qwen2-1.5b", batch=4, seq=8,
+                                      on_loss=losses.append)
+
+    res = col.run_executable(make_fg_stage_fn, make_bg_step_fn, iterations=5)
+    print(res.row())
+    print(f"fg iter {res.fg_iter_time*1e3:.1f} ms "
+          f"(isolated {res.fg_iter_time_isolated*1e3:.1f} ms)")
+    print(f"{len(losses)} real bg train steps dispatched across "
+          f"{len(split.bg)} gap submeshes (independent model replicas; "
+          f"includes one warmup step per replica)")
 
 
 if __name__ == "__main__":

@@ -13,7 +13,12 @@ from dataclasses import dataclass, field
 from typing import Callable, Dict, List, Optional
 
 from repro.core.costmodel import Hardware
-from repro.core.multiplex import MultiplexConfig, MultiplexSim, QoSMonitor
+from repro.core.multiplex import (
+    Collocator,
+    MultiplexConfig,
+    MultiplexSim,
+    QoSMonitor,
+)
 from repro.core.plan import BurstPlan
 from repro.core.planner import plan as make_plan
 
@@ -72,10 +77,9 @@ class ClusterCoordinator:
     def _usable_devices(self) -> int:
         """Largest power of two that fits the healthy set (planner search
         space is powers of two)."""
-        n, g = len(self.healthy), 1
-        while g * 2 <= n:
-            g *= 2
-        return g
+        from repro.core.plan import pow2_floor
+
+        return pow2_floor(len(self.healthy))
 
     # -- elasticity / fault handling ---------------------------------------
 
@@ -112,3 +116,44 @@ class ClusterCoordinator:
         assert fg is not None and fg.plan is not None
         sim = MultiplexSim(fg.plan, mcfg or MultiplexConfig(), monitor=self.monitor)
         return sim.run()
+
+    def collocate(
+        self,
+        mcfg: Optional[MultiplexConfig] = None,
+        *,
+        executable: bool = False,
+        make_fg_stage_fn: Optional[Callable] = None,
+        make_bg_step_fn: Optional[Callable] = None,
+        iterations: int = 3,
+    ):
+        """Collocate background work into the foreground plan's gaps.
+
+        ``executable=True`` dispatches real jitted steps onto disjoint
+        submeshes (``Collocator.run_executable``), returning a measured
+        ``CollocationResult``; when the process has fewer devices than the
+        plan assumes it falls back to the costless ``MultiplexSim`` (logged
+        as a 'fallback' ClusterEvent) and returns a ``SimResult`` — both
+        expose ``fg_slowdown`` / ``bg_steps_per_iter`` / ``row()``.
+        """
+        fg = self.foreground()
+        assert fg is not None and fg.plan is not None
+        if executable:
+            if make_fg_stage_fn is None or make_bg_step_fn is None:
+                raise ValueError(
+                    "executable collocation needs both make_fg_stage_fn and "
+                    "make_bg_step_fn"
+                )
+            import jax
+
+            if len(jax.devices()) >= fg.plan.num_gpus:
+                col = Collocator(fg.plan, mcfg or MultiplexConfig(),
+                                 monitor=self.monitor)
+                return col.run_executable(
+                    make_fg_stage_fn, make_bg_step_fn, iterations=iterations
+                )
+            self.events.append(ClusterEvent(
+                time.time(), "fallback",
+                f"executable collocation wants {fg.plan.num_gpus} devices, "
+                f"process has {len(jax.devices())} -> MultiplexSim",
+            ))
+        return self.simulate_collocation(mcfg)

@@ -1,6 +1,7 @@
 """Foreground/background multiplexing (paper §5), TPU-adapted.
 
-Two layers:
+Two layers — a costless simulation and an executable path — chosen by the
+caller (``ClusterCoordinator.collocate(executable=...)``):
 
 1. ``MultiplexSim`` — a discrete-event model of one accelerator cluster
    multiplexing a burst-parallel foreground job with background jobs.  It
@@ -10,18 +11,28 @@ Two layers:
    foreground slowdown + background throughput.  The interference model is
    parameterized by the paper's own measurements (naive collocation ≈ halves
    fg throughput; NCCL all-reduce >2× sensitive; non-preemptive overrun).
+   This path needs no accelerators and runs everywhere: planning-time
+   what-ifs, coordinator policy decisions, and the Fig-11 ablation tests.
 
-2. ``Collocator`` — the executable TPU path: background steps are dispatched
-   onto the devices left idle by the plan's gaps (disjoint submeshes —
-   DESIGN.md §2), with dispatch pacing (bounded in-flight futures) and the
-   slowdown feedback loop driven by a QoSMonitor of measured stage times.
+2. ``Collocator`` — the executable path: real jitted steps are dispatched
+   onto the devices left idle by the plan's gaps.  ``submeshes()`` carves
+   the device set into the plan's foreground submesh plus per-gap background
+   submeshes (``repro.launch.mesh.split_mesh_for_plan``), excluding devices
+   that host parallel ``BranchPlacement`` branches; ``run_executable()``
+   compiles fg stage fns and bg train steps onto those submeshes and
+   interleaves them with dispatch pacing (bounded in-flight futures) and the
+   slowdown feedback loop driven by a QoSMonitor of *measured* stage times.
+   It runs whenever the process has at least ``plan.num_gpus`` devices
+   (real TPU slice, or CPU with a forced host-device count); the coordinator
+   falls back to ``MultiplexSim`` otherwise.
 """
 from __future__ import annotations
 
 import math
+import time as _time
 from collections import defaultdict
 from dataclasses import dataclass, field
-from typing import Callable, Dict, List, Optional, Tuple
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
 from repro.core.plan import BurstPlan, GapWindow
 
@@ -247,22 +258,61 @@ class MultiplexSim:
 
 
 @dataclass
+class CollocationResult:
+    """Measured (not simulated) outcome of executable gap collocation.
+
+    ``fg_slowdown`` is the steady state after the feedback loop has banned
+    harmful origins — the bound the QoS mechanism promises.  ``iter_details``
+    exposes every collocated iteration as (wall_time, bg_steps_launched) so
+    the learning-phase tradeoff (iterations that collocated heavily may have
+    run slower) stays visible rather than hidden by the min.
+    """
+
+    fg_iter_time: float
+    fg_iter_time_isolated: float
+    fg_slowdown: float
+    bg_steps_per_iter: float
+    bg_throughput: float  # bg steps per second of collocated fg wall time
+    iterations: int
+    banned_ops: Tuple[str, ...] = ()
+    iter_details: Tuple[Tuple[float, int], ...] = ()
+
+    def row(self) -> str:
+        return (
+            f"fg_slowdown={self.fg_slowdown:.3f} "
+            f"bg_steps/iter={self.bg_steps_per_iter:.1f} "
+            f"bg_steps/s={self.bg_throughput:.1f} "
+            f"banned={list(self.banned_ops) or 'none'}"
+        )
+
+
+@dataclass
 class Collocator:
     """Dispatches background steps into plan gaps with pacing + feedback.
 
-    ``fg_stage_fns``: callables per stage (already jitted on the fg submesh).
-    ``bg_step_fn``: one background step (jitted on the complement submesh).
-    The dispatcher bounds in-flight bg futures (launch pacing) and consults
-    the QoSMonitor before collocating around sensitive stages.
+    ``run_executable`` is the real path: it builds disjoint fg/bg submeshes
+    from the plan (``submeshes()``), compiles the caller's stage/step
+    factories onto them, and interleaves paced background dispatch with the
+    foreground stages, measuring slowdown via the QoSMonitor.
+    ``run_iteration`` is the lighter legacy harness: the caller supplies
+    already-jitted callables and only the dispatch loop runs here.
+    ``devices`` pins an explicit device subset (default: process devices).
     """
 
     plan: BurstPlan
     cfg: MultiplexConfig
     monitor: QoSMonitor = field(default_factory=QoSMonitor)
+    devices: Optional[Sequence] = None
+
+    def __post_init__(self):
+        # hoisted: one sim + one bg step-time quantum for the collocator's
+        # lifetime (previously rebuilt inside every schedule() call)
+        self._sim = MultiplexSim(self.plan, self.cfg, monitor=self.monitor)
+        self.bg_step_quantum = self._sim.bg_step_time()
 
     def schedule(self) -> List[Tuple[int, int]]:
         """(stage_index, n_bg_steps) pairs for one iteration."""
-        bg_t = MultiplexSim(self.plan, self.cfg).bg_step_time()
+        bg_t = self.bg_step_quantum
         out = []
         for gap in self.plan.gaps():
             op = f"stage{gap.stage_index}"
@@ -274,6 +324,157 @@ class Collocator:
             if n > 0:
                 out.append((gap.stage_index, n))
         return out
+
+    # -- executable submesh path -------------------------------------------
+
+    def submeshes(self, *, fg_model: int = 1, bg_model: int = 1):
+        """Disjoint fg/bg submeshes for this plan (PlanSubmeshes)."""
+        from repro.launch.mesh import split_mesh_for_plan
+
+        return split_mesh_for_plan(self.plan, devices=self.devices,
+                                   fg_model=fg_model, bg_model=bg_model)
+
+    def run_executable(
+        self,
+        make_fg_stage_fn: Callable,
+        make_bg_step_fn: Callable,
+        *,
+        iterations: int = 3,
+        fg_model: int = 1,
+        bg_model: int = 1,
+        time_fn: Callable[[], float] = _time.perf_counter,
+    ) -> CollocationResult:
+        """Measure real gap collocation on this process's devices.
+
+        ``make_fg_stage_fn(stage, mesh)`` -> zero-arg callable running that
+        foreground stage on its submesh (a Mesh over the stage's device
+        prefix); ``make_bg_step_fn(mesh)`` -> zero-arg callable dispatching
+        one background step on a gap submesh (async; its result is blocked
+        on by the pacing loop).  Runs ``iterations`` isolated iterations
+        (recording per-stage baselines), ``iterations`` collocated ones,
+        plus one final settled iteration after the feedback loop has banned
+        harmful origins; returns min-over-iterations times so compile noise
+        and the feedback loop's learning phase don't pollute the steady
+        state the QoS mechanism is meant to deliver.
+        """
+        from repro.launch.mesh import submesh_from_range
+
+        import jax
+
+        devs = list(self.devices) if self.devices is not None else jax.devices()
+        # The monitor may hold *simulated* times (a shared coordinator
+        # monitor fed by MultiplexSim) — a different time domain than the
+        # wall-clock measurements below.  Re-derive QoS state for this
+        # plan's ops from measurement so stale baselines can't poison the
+        # slowdown feedback.
+        for si in range(len(self.plan.stages())):
+            op = f"stage{si}"
+            self.monitor.baseline.pop(op, None)
+            self.monitor.ema.pop(op, None)
+            self.monitor.banned.discard(op)
+        split = self.submeshes(fg_model=fg_model, bg_model=bg_model)
+        stages = self.plan.stages()
+        mesh_cache: Dict[Tuple[int, int], object] = {
+            split.fg_range: split.fg_mesh
+        }
+        fg_fns = []
+        for i, st in enumerate(stages):
+            rng = split.stage_fg_range[i]
+            if rng not in mesh_cache:
+                model = fg_model if st.gpus % fg_model == 0 else 1
+                mesh_cache[rng] = submesh_from_range(
+                    rng[0], rng[1], model=model, devices=devs
+                )
+            fg_fns.append(make_fg_stage_fn(st, mesh_cache[rng]))
+        bg_fns = {
+            si: make_bg_step_fn(mesh) for si, (rng, mesh) in split.bg.items()
+        }
+
+        # compile warmup outside the timed region
+        for fn in fg_fns:
+            _block(fn())
+        for bf in bg_fns.values():
+            _block(bf())
+
+        def run_iter(collocate: bool) -> Tuple[float, int, Dict[int, int]]:
+            sched = dict(self.schedule()) if collocate else {}
+            inflight: List[Tuple[int, object]] = []  # (origin stage, future)
+            launched = 0
+            t_start = time_fn()
+            for si, fn in enumerate(fg_fns):
+                op = f"stage{si}"
+                bf = bg_fns.get(si)
+                n_bg = sched.get(si, 0) if bf is not None else 0
+                for _ in range(n_bg):
+                    while len(inflight) >= self.cfg.max_inflight:
+                        _block(inflight.pop(0)[1])  # launch pacing
+                    inflight.append((si, bf()))
+                    launched += 1
+                # completed futures no longer interfere — drop them so a
+                # slow stage doesn't ban origins whose work already finished
+                inflight[:] = [(o, f) for o, f in inflight if not _future_done(f)]
+                outstanding = {o for o, _ in inflight}
+                t0 = time_fn()
+                _block(fn())
+                dt = time_fn() - t0
+                if not collocate:
+                    prev = self.monitor.baseline.get(op)
+                    self.monitor.record_baseline(
+                        op, dt if prev is None else min(prev, dt)
+                    )
+                else:
+                    self.monitor.record(op, dt, collocated=bool(outstanding))
+                    # non-preemptive bg tails harm *later* stages, not the
+                    # gap they were launched into — attribute the overrun to
+                    # the originating gap ops so the feedback loop converges
+                    if (self.cfg.use_feedback and outstanding
+                            and self.monitor.slowdown(op)
+                            > self.monitor.slowdown_threshold):
+                        self.monitor.banned.update(
+                            f"stage{o}" for o in outstanding
+                        )
+            for _, f in inflight:
+                _block(f)
+            return time_fn() - t_start, launched, sched
+
+        iso = [run_iter(False)[0] for _ in range(max(1, iterations))]
+        fg_iso = min(iso)
+        col: List[Tuple[float, int]] = []
+
+        def col_iter() -> None:
+            t, launched, sched = run_iter(True)
+            col.append((t, launched))
+            # iteration-level watchdog: per-op feedback only bans ops whose
+            # own slowdown crosses the threshold, but many sub-threshold
+            # inflations can still break the iteration bound — ban every
+            # origin that collocated in an over-bound iteration
+            if (self.cfg.use_feedback and sched
+                    and t > self.monitor.slowdown_threshold * fg_iso):
+                self.monitor.banned.update(f"stage{s}" for s in sched)
+
+        for _ in range(max(1, iterations)):
+            col_iter()
+        # settled phase: keep iterating until the feedback loop stops
+        # learning (an iteration adds no new bans), so the measurement
+        # includes the converged steady state the QoS mechanism promises
+        # (bounded fg slowdown), not just the learning phase
+        for _ in range(len(fg_fns)):
+            before = set(self.monitor.banned)
+            col_iter()
+            if set(self.monitor.banned) == before:
+                break
+        fg_col = min(t for t, _ in col)
+        bg_steps = sum(n for _, n in col) / len(col)
+        return CollocationResult(
+            fg_iter_time=fg_col,
+            fg_iter_time_isolated=fg_iso,
+            fg_slowdown=fg_col / max(fg_iso, 1e-30),
+            bg_steps_per_iter=bg_steps,
+            bg_throughput=bg_steps / max(fg_col, 1e-30),
+            iterations=len(col),
+            banned_ops=tuple(sorted(self.monitor.banned)),
+            iter_details=tuple((t, n) for t, n in col),
+        )
 
     def run_iteration(self, fg_stage_fns: List[Callable], bg_step_fn: Callable,
                       time_fn: Callable[[], float]) -> Dict[str, float]:
@@ -309,3 +510,15 @@ def _block(x):
         return jax.block_until_ready(x)
     except Exception:
         return x
+
+
+def _future_done(x) -> bool:
+    """True when a dispatched bg result has already materialized (jax arrays
+    expose is_ready()); unknown objects count as still outstanding."""
+    ready = getattr(x, "is_ready", None)
+    if callable(ready):
+        try:
+            return bool(ready())
+        except Exception:
+            return False
+    return False

@@ -76,6 +76,42 @@ class BranchPlacement:
         return (self.device_start, self.device_end)
 
 
+def pow2_floor(n: int) -> int:
+    """Largest power of two <= n (the planner's scale set is powers of two)."""
+    g = 1
+    while g * 2 <= n:
+        g *= 2
+    return g
+
+
+# -- device-index range arithmetic (used by gap collocation) ----------------
+
+
+def merge_ranges(ranges) -> List[Tuple[int, int]]:
+    """Sort + coalesce half-open [start, end) index ranges."""
+    out: List[List[int]] = []
+    for s, e in sorted((int(s), int(e)) for s, e in ranges if e > s):
+        if out and s <= out[-1][1]:
+            out[-1][1] = max(out[-1][1], e)
+        else:
+            out.append([s, e])
+    return [(s, e) for s, e in out]
+
+
+def complement_ranges(busy, total: int) -> List[Tuple[int, int]]:
+    """Free [start, end) ranges inside [0, total) not covered by ``busy``."""
+    free: List[Tuple[int, int]] = []
+    cur = 0
+    for s, e in merge_ranges(busy):
+        s, e = max(0, min(s, total)), max(0, min(e, total))
+        if s > cur:
+            free.append((cur, s))
+        cur = max(cur, e)
+    if cur < total:
+        free.append((cur, total))
+    return free
+
+
 @dataclass(frozen=True)
 class BurstPlan:
     layers: Tuple[LayerPlan, ...]
@@ -124,6 +160,34 @@ class BurstPlan:
     def idle_gpu_sec(self) -> float:
         return sum(g.duration * g.free_gpus for g in self.gaps())
 
+    def branch_device_ranges(self) -> List[Tuple[int, int]]:
+        """Device ranges hosting *parallel-placed* ParallelBlock branches.
+
+        The critical branch of each block lives in [0, peak) — inside the
+        stage's own device window — so only non-critical branches placed on
+        disjoint devices widen the busy set.  Demoted branches time-multiplex
+        the critical range and occupy nothing extra."""
+        out = []
+        for v in self.block_details.values():
+            if not isinstance(v, tuple):
+                continue
+            for p in v:
+                if getattr(p, "parallel", False) and not getattr(p, "critical", False):
+                    out.append((p.device_start, p.device_end))
+        return merge_ranges(out)
+
+    def busy_device_ranges(self, stage_index: int) -> List[Tuple[int, int]]:
+        """Devices a background job must avoid during ``stage_index``: the
+        stage's own [0, gpus) plus every parallel branch placement (branch
+        windows are not localized to one stage, so they are excluded for the
+        whole iteration — conservative)."""
+        st = self.stages()[stage_index]
+        return merge_ranges([(0, st.gpus)] + self.branch_device_ranges())
+
+    def free_device_ranges(self, stage_index: int) -> List[Tuple[int, int]]:
+        """Device ranges a background job may occupy during ``stage_index``."""
+        return complement_ranges(self.busy_device_ranges(stage_index), self.num_gpus)
+
     def placement_slack(self) -> float:
         """Total time of branches the reduction decided to run in parallel
         but the placement had to demote (gap window full).  ``total_time``
@@ -162,11 +226,16 @@ class StageSharding:
     batch_axes: mesh axes carrying the sample dimension for this stage.
     model_active: whether the 'model' axis does TP work in this stage; if
     False the model axis is a *gap* the multiplexer may fill.
+    free_ranges: device-index ranges a background job may occupy during this
+    stage — the complement of the stage's own devices AND of every parallel
+    ParallelBlock branch placement (``plan.block_details``), so collocated
+    work never lands on devices hosting a concurrent branch.
     """
 
     stage: StagePlan
     batch_axes: Tuple[str, ...]
     model_active: bool
+    free_ranges: Tuple[Tuple[int, int], ...] = ()
 
 
 def map_plan_to_mesh(plan: BurstPlan, mesh_axes: Dict[str, int]) -> List[StageSharding]:
@@ -183,13 +252,18 @@ def map_plan_to_mesh(plan: BurstPlan, mesh_axes: Dict[str, int]) -> List[StageSh
     np_ = mesh_axes.get("pod", 1)
     total = nd * nm * np_
     out = []
-    for s in plan.stages():
+    branch = plan.branch_device_ranges()  # hoisted: same for every stage
+    for idx, s in enumerate(plan.stages()):
+        free = tuple(complement_ranges(
+            merge_ranges([(0, s.gpus)] + branch), plan.num_gpus
+        ))
         if s.gpus >= total:
             axes = tuple(a for a in ("pod", "data", "model") if a in mesh_axes)
-            out.append(StageSharding(s, axes, model_active=True))
+            out.append(StageSharding(s, axes, model_active=True, free_ranges=free))
         elif s.gpus >= nd * np_:
             axes = tuple(a for a in ("pod", "data") if a in mesh_axes)
-            out.append(StageSharding(s, axes, model_active=True))
+            out.append(StageSharding(s, axes, model_active=True, free_ranges=free))
         else:
-            out.append(StageSharding(s, ("data",), model_active=False))
+            out.append(StageSharding(s, ("data",), model_active=False,
+                                     free_ranges=free))
     return out

@@ -7,9 +7,14 @@ smoke tests and benches see the real (1-device) platform.
 """
 from __future__ import annotations
 
+from dataclasses import dataclass
+from typing import Dict, Optional, Sequence, Tuple
+
 import jax
 import numpy as np
 from jax.sharding import Mesh
+
+from repro.core.plan import complement_ranges, merge_ranges, pow2_floor
 
 
 def make_production_mesh(*, multi_pod: bool = False):
@@ -18,25 +23,125 @@ def make_production_mesh(*, multi_pod: bool = False):
     return jax.make_mesh(shape, axes)
 
 
-def make_mesh(data: int, model: int, pod: int = 1):
-    """Arbitrary mesh (tests / small-scale demos on host devices)."""
+def make_mesh(data: int, model: int, pod: int = 1, devices: Optional[Sequence] = None):
+    """Arbitrary mesh (tests / small-scale demos on host devices).
+
+    ``devices`` restricts the mesh to an explicit device subset (elastic
+    re-mesh over survivors, submesh demos); default is the process devices.
+    """
     if pod > 1:
-        return jax.make_mesh((pod, data, model), ("pod", "data", "model"))
-    return jax.make_mesh((data, model), ("data", "model"))
+        return jax.make_mesh((pod, data, model), ("pod", "data", "model"),
+                             devices=devices)
+    return jax.make_mesh((data, model), ("data", "model"), devices=devices)
 
 
-def largest_pow2_mesh(n_devices: int):
+def largest_pow2_mesh(n_devices: int, devices: Optional[Sequence] = None):
     """Elastic re-mesh: biggest power-of-two (data, model) mesh that fits
-    n_devices, favoring the data axis 4:1 (used after failures)."""
-    g = 1
-    while g * 2 <= n_devices:
-        g *= 2
+    n_devices, favoring the data axis 4:1 (used after failures).  With a
+    non-power-of-two survivor count the excess devices are left out of the
+    mesh (the planner's scale set is powers of two)."""
+    g = pow2_floor(n_devices)
     model = 1
     while model * model * 4 <= g:
         model *= 2
     data = g // model
-    return make_mesh(data, model)
+    if devices is not None:
+        devices = list(devices)[: data * model]
+    return make_mesh(data, model, devices=devices)
 
 
 def mesh_axis_sizes(mesh: Mesh) -> dict:
     return dict(zip(mesh.axis_names, mesh.devices.shape))
+
+
+# ---------------------------------------------------------------------------
+# Plan-driven submeshes (executable gap collocation — paper §5, TPU mode)
+# ---------------------------------------------------------------------------
+
+
+def submesh_from_range(start: int, end: int, *, model: int = 1,
+                       devices: Optional[Sequence] = None) -> Mesh:
+    """A (data, model) Mesh over the device-index range [start, end).
+
+    Devices are taken positionally from ``devices`` (default: the process
+    device list), so two non-overlapping index ranges always yield disjoint
+    submeshes — the invariant the collocator relies on.
+    """
+    devs = list(devices) if devices is not None else jax.devices()
+    n = end - start
+    if n <= 0:
+        raise ValueError(f"empty device range [{start}, {end})")
+    if start < 0 or end > len(devs):
+        raise ValueError(
+            f"device range [{start}, {end}) outside the {len(devs)}-device set"
+        )
+    if n % model:
+        raise ValueError(f"range size {n} not divisible by model={model}")
+    arr = np.array(devs[start:end], dtype=object).reshape(n // model, model)
+    return Mesh(arr, ("data", "model"))
+
+
+@dataclass(frozen=True)
+class PlanSubmeshes:
+    """Disjoint fg/bg submeshes for one BurstPlan.
+
+    ``fg_range``/``fg_mesh`` span the plan's peak foreground device usage;
+    ``bg`` maps each gap stage to the largest free device range (after
+    excluding parallel-branch placements) and its Mesh.  ``stage_fg_range``
+    gives the foreground's *actual* device window per stage — during a gap
+    stage the fg occupies a strict prefix of ``fg_range``, and every bg
+    range is disjoint from it.
+    """
+
+    fg_range: Tuple[int, int]
+    fg_mesh: Mesh
+    bg: Dict[int, Tuple[Tuple[int, int], Mesh]]
+    stage_fg_range: Dict[int, Tuple[int, int]]
+
+    def bg_mesh(self, stage_index: int) -> Optional[Mesh]:
+        hit = self.bg.get(stage_index)
+        return hit[1] if hit else None
+
+
+def split_mesh_for_plan(plan, *, devices: Optional[Sequence] = None,
+                        fg_model: int = 1, bg_model: int = 1) -> PlanSubmeshes:
+    """Carve the device set into the plan's fg submesh + per-gap bg submeshes.
+
+    For each ``GapWindow`` the bg submesh is built from the largest range in
+    ``plan.free_device_ranges(stage)`` — i.e. the gap's idle devices minus
+    any ``BranchPlacement`` ranges hosting parallel block branches — trimmed
+    to a multiple of ``bg_model``.  Raises when the process has fewer
+    devices than the plan assumes.
+    """
+    devs = list(devices) if devices is not None else jax.devices()
+    if len(devs) < plan.num_gpus:
+        raise ValueError(
+            f"plan wants {plan.num_gpus} devices, process has {len(devs)}"
+        )
+    stages = plan.stages()
+    fg_peak = max(s.gpus for s in stages)
+    if fg_peak % fg_model:
+        fg_model = 1
+    fg_mesh = submesh_from_range(0, fg_peak, model=fg_model, devices=devs)
+    bg: Dict[int, Tuple[Tuple[int, int], Mesh]] = {}
+    stage_fg: Dict[int, Tuple[int, int]] = {
+        i: (0, s.gpus) for i, s in enumerate(stages)
+    }
+    branch = plan.branch_device_ranges()  # hoisted: same for every gap
+    for gap in plan.gaps():
+        st = stages[gap.stage_index]
+        free = complement_ranges(
+            merge_ranges([(0, st.gpus)] + branch), plan.num_gpus
+        )
+        if not free:
+            continue
+        s, e = max(free, key=lambda r: r[1] - r[0])
+        n = (e - s) - (e - s) % bg_model
+        if n <= 0:
+            continue
+        bg[gap.stage_index] = (
+            (s, s + n),
+            submesh_from_range(s, s + n, model=bg_model, devices=devs),
+        )
+    return PlanSubmeshes(fg_range=(0, fg_peak), fg_mesh=fg_mesh, bg=bg,
+                         stage_fg_range=stage_fg)

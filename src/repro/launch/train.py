@@ -14,6 +14,38 @@ import argparse
 import dataclasses
 
 
+def _bg_submesh(fg_devices: int, amp_limit: float, hw, cfg):
+    """Largest plan-gap submesh disjoint from the foreground training mesh.
+
+    The production plan assumes 256 devices, so the foreground graph is
+    re-planned at the host device count and its gaps carved into submeshes
+    (``split_mesh_for_plan``); the biggest free range that clears the fg
+    mesh's device prefix [0, fg_devices) wins.  Falls back to the raw spare
+    devices when the host plan leaves no usable gap, and to None (plain
+    same-device jit) when every device belongs to the fg mesh."""
+    import jax
+
+    from repro.configs import TRAIN_4K
+    from repro.core.plan import pow2_floor
+    from repro.core.planner import plan as make_plan
+    from repro.launch.mesh import split_mesh_for_plan, submesh_from_range
+    from repro.models.graph import build_lm_graph
+
+    n_dev = len(jax.devices())
+    if n_dev <= fg_devices:
+        return None
+    host_plan = make_plan(build_lm_graph(cfg, TRAIN_4K), pow2_floor(n_dev),
+                          amp_limit, hw)
+    best = None
+    for rng, _mesh in split_mesh_for_plan(host_plan).bg.values():
+        lo, hi = max(rng[0], fg_devices), rng[1]
+        if hi - lo > 0 and (best is None or hi - lo > best[1] - best[0]):
+            best = (lo, hi)
+    if best is None:
+        best = (fg_devices, n_dev)
+    return submesh_from_range(best[0], best[1])
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", required=True)
@@ -53,21 +85,33 @@ def main():
 
     bg_fn = None
     if args.bg_arch:
-        from repro.models.api import get_model, make_batch
-        from repro.optim.optimizer import make_optimizer
-        from repro.train.state import init_state
-        from repro.train.step import make_train_step
+        bg_mesh = _bg_submesh(args.data * args.model, args.amp_limit,
+                              coord.hw, cfg)
+        if bg_mesh is not None:
+            # executable collocation: the bg step is jitted onto a gap
+            # submesh disjoint from the foreground training mesh
+            from repro.train.step import bg_step_factory
 
-        bcfg = get_config(args.bg_arch).reduced()
-        bapi = get_model(bcfg)
-        bopt = make_optimizer(bcfg)
-        bstate = init_state(jax.random.PRNGKey(1), bapi, bopt)
-        bstep = jax.jit(make_train_step(bapi, bopt))
-        bbatch = make_batch(jax.random.PRNGKey(2), bcfg, 2, 32)
-        holder = {"state": bstate}
+            bg_fn = bg_step_factory(args.bg_arch, batch=4, seq=32,
+                                    seed=1)(bg_mesh)
+            ids = sorted(d.id for d in bg_mesh.devices.flat)
+            print(f"bg job on disjoint submesh devices {ids}")
+        else:
+            from repro.models.api import get_model, make_batch
+            from repro.optim.optimizer import make_optimizer
+            from repro.train.state import init_state
+            from repro.train.step import make_train_step
 
-        def bg_fn():
-            holder["state"], _ = bstep(holder["state"], bbatch)
+            bcfg = get_config(args.bg_arch).reduced()
+            bapi = get_model(bcfg)
+            bopt = make_optimizer(bcfg)
+            bstate = init_state(jax.random.PRNGKey(1), bapi, bopt)
+            bstep = jax.jit(make_train_step(bapi, bopt))
+            bbatch = make_batch(jax.random.PRNGKey(2), bcfg, 2, 32)
+            holder = {"state": bstate}
+
+            def bg_fn():
+                holder["state"], _ = bstep(holder["state"], bbatch)
 
     tc = TrainConfig(steps=args.steps, ckpt_dir=args.ckpt_dir, bg_step_fn=bg_fn)
     report = train(run_cfg, shape, mesh, tc)

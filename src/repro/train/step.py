@@ -86,6 +86,49 @@ def jit_train_step(api, optimizer, mesh, shape: ShapeConfig, donate: bool = True
     return fn, st_sh, bt_sh
 
 
+def bg_step_factory(arch: str = "qwen2-1.5b", *, batch: int = 4, seq: int = 8,
+                    seed: int = 0, on_loss: Optional[Callable] = None):
+    """``make_bg_step_fn`` for executable gap collocation
+    (``Collocator.run_executable``): returns a callable that, given a gap
+    submesh, jits a REAL tiny-LM training step onto it with a private state
+    replica and dispatches one step per call.  ``on_loss`` observes each
+    step's (device-resident) loss.  Shared by bench_collocation,
+    multiplex_demo and the training entrypoint's --bg-arch path.
+    """
+    import dataclasses
+
+    from repro.configs import TRAIN_4K, get_config
+    from repro.models.api import get_model, make_batch
+    from repro.optim.optimizer import make_optimizer
+    from repro.train.state import init_state
+
+    cfg = get_config(arch).reduced()
+    api = get_model(cfg)
+    opt = make_optimizer(cfg)
+    shape = dataclasses.replace(TRAIN_4K, seq_len=seq, global_batch=batch,
+                                name="bg")
+    raw = make_batch(jax.random.PRNGKey(seed + 1), cfg, batch, seq)
+
+    def make_bg_step_fn(mesh):
+        fn, st_sh, bt_sh = jit_train_step(api, opt, mesh, shape, donate=False)
+        holder = {
+            "state": jax.device_put(
+                init_state(jax.random.PRNGKey(seed), api, opt), st_sh
+            )
+        }
+        b = jax.device_put(raw, bt_sh)
+
+        def step():
+            holder["state"], metrics = fn(holder["state"], b)
+            if on_loss is not None:
+                on_loss(metrics["loss"])
+            return metrics["loss"]
+
+        return step
+
+    return make_bg_step_fn
+
+
 def jit_forward(api, mesh, shape: ShapeConfig, rules: Optional[dict] = None, report=None):
     from repro.dist.sharding import param_shardings
     from repro.models.api import input_specs

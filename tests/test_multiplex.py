@@ -82,6 +82,24 @@ def test_collocator_schedule_paced(vgg_plan):
     assert stages <= gap_stages
 
 
+def test_collocator_hoists_bg_step_time(vgg_plan, monkeypatch):
+    """The bg step quantum is computed once at construction — schedule()
+    must not rebuild a MultiplexSim per call (the old per-iteration cost)."""
+    import repro.core.multiplex as mx
+
+    cfg = MultiplexConfig(max_inflight=2)
+    col = Collocator(vgg_plan, cfg)
+    assert col.bg_step_quantum == MultiplexSim(vgg_plan, cfg).bg_step_time()
+    first = col.schedule()
+
+    def boom(*a, **k):
+        raise AssertionError("MultiplexSim rebuilt inside schedule()")
+
+    monkeypatch.setattr(mx, "MultiplexSim", boom)
+    assert col.schedule() == first
+    assert col.schedule() == first
+
+
 def test_collocator_respects_feedback(vgg_plan):
     col = Collocator(vgg_plan, MultiplexConfig(max_inflight=4))
     gaps = vgg_plan.gaps()
