@@ -1,0 +1,70 @@
+"""Shared helpers for the executable smoke benchmarks.
+
+Imported lazily from inside ``smoke()`` functions (script mode puts the
+benchmarks/ directory on sys.path; ``benchmarks/run.py`` never calls the
+smoke paths, so package-mode imports stay clean).
+"""
+from __future__ import annotations
+
+import datetime
+import json
+import os
+import subprocess
+
+
+def git_sha() -> "str | None":
+    try:
+        out = subprocess.run(
+            ["git", "rev-parse", "--short", "HEAD"],
+            capture_output=True, text=True, timeout=10,
+            cwd=os.path.dirname(os.path.abspath(__file__)),
+        ).stdout.strip()
+        return out or None
+    except (OSError, subprocess.SubprocessError):
+        return None
+
+
+def utc_now_iso() -> str:
+    return datetime.datetime.now(datetime.timezone.utc).isoformat(
+        timespec="seconds"
+    )
+
+
+def append_record(bench_file: str, entry: dict) -> None:
+    """Append one measurement entry to a JSON-list record file."""
+    history = []
+    if os.path.exists(bench_file):
+        with open(bench_file) as f:
+            history = json.load(f)
+    history.append(entry)
+    with open(bench_file, "w") as f:
+        json.dump(history, f, indent=2)
+        f.write("\n")
+    print(f"recorded -> {os.path.normpath(bench_file)}")
+
+
+def proportional_fg_stage_fn(fg_plan):
+    """``make_fg_stage_fn`` whose per-stage compute scales with the planned
+    stage duration (shared by the collocation and cluster-throughput smokes
+    so their foreground loads are comparable)."""
+    import jax
+    import jax.numpy as jnp
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    durations = [s.duration for s in fg_plan.stages()]
+    dmin = min(d for d in durations if d > 0)
+
+    def make_fg_stage_fn(stage, mesh):
+        reps = 4 * max(1, min(12, round(stage.duration / dmin)))
+        x = jax.device_put(jnp.full((256, 256), 0.01, jnp.float32),
+                           NamedSharding(mesh, P(None, None)))
+
+        @jax.jit
+        def f(x):
+            for _ in range(reps):
+                x = jnp.tanh(x @ x) * 0.1 + 0.01
+            return x
+
+        return lambda: f(x)
+
+    return make_fg_stage_fn

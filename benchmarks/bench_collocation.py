@@ -20,7 +20,6 @@ appends the measurement to BENCH_collocation.json.
 """
 from __future__ import annotations
 
-import json
 import os
 import sys
 
@@ -82,8 +81,8 @@ def smoke(record: bool = False, iterations: int = 4) -> int:
             "XLA_FLAGS", "--xla_force_host_platform_device_count=8"
         )
     import jax
-    import jax.numpy as jnp
-    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    import _bench_util
 
     from repro.configs.vgg16 import CONFIG as VCFG
     from repro.core.costmodel import A100
@@ -115,21 +114,8 @@ def smoke(record: bool = False, iterations: int = 4) -> int:
         assert not (stage_fg_ids & bg_ids), (si, stage_fg_ids, bg_ids)
 
     # fg stages: compute sized proportionally to the planned stage duration
-    durations = [s.duration for s in fg_plan.stages()]
-    dmin = min(d for d in durations if d > 0)
-
-    def make_fg_stage_fn(stage, mesh):
-        reps = 4 * max(1, min(12, round(stage.duration / dmin)))
-        x = jax.device_put(jnp.full((256, 256), 0.01, jnp.float32),
-                           NamedSharding(mesh, P(None, None)))
-
-        @jax.jit
-        def f(x):
-            for _ in range(reps):
-                x = jnp.tanh(x @ x) * 0.1 + 0.01
-            return x
-
-        return lambda: f(x)
+    # (shared with bench_cluster_throughput so the two smokes are comparable)
+    make_fg_stage_fn = _bench_util.proportional_fg_stage_fn(fg_plan)
 
     # bg: an actual jitted LM training step, sharded on the gap submesh
     res = col.run_executable(
@@ -143,22 +129,9 @@ def smoke(record: bool = False, iterations: int = 4) -> int:
           f"gate<= {QOS_SLOWDOWN_BOUND}: {'ok' if ok else 'FAIL'}")
 
     if record:
-        import datetime
-        import subprocess
-
-        try:
-            sha = subprocess.run(
-                ["git", "rev-parse", "--short", "HEAD"],
-                capture_output=True, text=True, timeout=10,
-                cwd=os.path.dirname(os.path.abspath(__file__)),
-            ).stdout.strip() or None
-        except (OSError, subprocess.SubprocessError):
-            sha = None
         entry = {
-            "date": datetime.datetime.now(datetime.timezone.utc).isoformat(
-                timespec="seconds"
-            ),
-            "commit": sha,
+            "date": _bench_util.utc_now_iso(),
+            "commit": _bench_util.git_sha(),
             "config": f"vgg16@{G}-bg-qwen2-smoke",
             "devices": n_dev,
             "iterations": iterations,
@@ -175,15 +148,7 @@ def smoke(record: bool = False, iterations: int = 4) -> int:
             "qos_bound": QOS_SLOWDOWN_BOUND,
             "gate_ok": ok,
         }
-        history = []
-        if os.path.exists(BENCH_FILE):
-            with open(BENCH_FILE) as f:
-                history = json.load(f)
-        history.append(entry)
-        with open(BENCH_FILE, "w") as f:
-            json.dump(history, f, indent=2)
-            f.write("\n")
-        print(f"recorded -> {os.path.normpath(BENCH_FILE)}")
+        _bench_util.append_record(BENCH_FILE, entry)
 
     if not ok:
         print(

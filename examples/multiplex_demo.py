@@ -1,7 +1,8 @@
 """Real fg/bg multiplexed execution on disjoint submeshes: the foreground
 plan's jitted stages run on their device prefix while REAL background LM
-training steps are paced into the plan's gap submeshes through the
-Collocator (the executable path of paper §5).
+training steps from TWO prioritized tenants are paced into the plan's gap
+submeshes through the Collocator (the executable multi-tenant path of
+paper §5 — the cluster-throughput setting).
 
     PYTHONPATH=src python examples/multiplex_demo.py
 
@@ -21,7 +22,7 @@ def main():
 
     from repro.configs.vgg16 import CONFIG as VCFG
     from repro.core.costmodel import A100
-    from repro.core.multiplex import Collocator, MultiplexConfig
+    from repro.core.multiplex import BgTenant, Collocator, MultiplexConfig
     from repro.core.planner import plan
     from repro.models.graph import build_vgg_graph
     from repro.train.step import bg_step_factory
@@ -30,12 +31,28 @@ def main():
     fg_plan = plan(build_vgg_graph(VCFG, 32), 8, amp_limit=1.5, hw=A100)
     print(fg_plan.summary())
 
-    col = Collocator(fg_plan, MultiplexConfig(max_inflight=2))
-    print("collocation schedule (stage -> bg steps):", col.schedule())
+    # two prioritized background tenants: each gap's free device ranges are
+    # packed largest-chunk-to-highest-priority, every tenant training a REAL
+    # tiny LM on its own disjoint submesh with a private state replica
+    losses = []
+    tenants = [
+        BgTenant("bg-hi", 2, bg_step_factory("qwen2-1.5b", batch=4, seq=8,
+                                             seed=0, on_loss=losses.append)),
+        BgTenant("bg-lo", 1, bg_step_factory("qwen2-1.5b", batch=4, seq=8,
+                                             seed=1, on_loss=losses.append)),
+    ]
+    col = Collocator(fg_plan, MultiplexConfig(max_inflight=2),
+                     tenants=tenants)
+    print("tenant schedule (stage, tenant, bg steps):",
+          col.schedule_tenants())
     split = col.submeshes()
-    for si, (rng, mesh) in sorted(split.bg.items()):
+    for si, slots in sorted(split.bg_tenants.items()):
+        carve = " ".join(
+            f"{tenants[i].job}=[{rng[0]},{rng[1]})"
+            for i, (rng, _m) in enumerate(slots)
+        )
         print(f"  stage {si}: fg devices {split.stage_fg_range[si]} "
-              f"bg submesh devices [{rng[0]}, {rng[1]})")
+              f"bg {carve}")
 
     # foreground stages: stand-in compute kernels on the stage's submesh
     def make_fg_stage_fn(stage, mesh):
@@ -50,18 +67,15 @@ def main():
 
         return lambda: f(x)
 
-    # background job: a REAL tiny-LM training step jitted per gap submesh
-    # (each submesh gets its own independent state replica)
-    losses = []
-    make_bg_step_fn = bg_step_factory("qwen2-1.5b", batch=4, seq=8,
-                                      on_loss=losses.append)
-
-    res = col.run_executable(make_fg_stage_fn, make_bg_step_fn, iterations=5)
+    res = col.run_executable(make_fg_stage_fn, iterations=5)
     print(res.row())
     print(f"fg iter {res.fg_iter_time*1e3:.1f} ms "
           f"(isolated {res.fg_iter_time_isolated*1e3:.1f} ms)")
+    for t in res.tenants:
+        print(f"  {t.row()}")
+    n_submeshes = sum(len(s) for s in split.bg_tenants.values())
     print(f"{len(losses)} real bg train steps dispatched across "
-          f"{len(split.bg)} gap submeshes (independent model replicas; "
+          f"{n_submeshes} tenant gap submeshes (independent model replicas; "
           f"includes one warmup step per replica)")
 
 

@@ -14,7 +14,11 @@ from typing import Callable, Dict, List, Optional
 
 from repro.core.costmodel import Hardware
 from repro.core.multiplex import (
+    BgTenant,
     Collocator,
+    CollocationResult,
+    ExecutableCache,
+    InterferenceModel,
     MultiplexConfig,
     MultiplexSim,
     QoSMonitor,
@@ -33,6 +37,8 @@ class Job:
     devices: tuple = ()
     status: str = "pending"  # pending | running | failed | done
     steps_done: int = 0
+    priority: int = 0  # background jobs: higher packs first into gaps
+    step_fn_factory: Optional[Callable] = None  # mesh -> zero-arg bg step
 
 
 @dataclass
@@ -52,6 +58,11 @@ class ClusterCoordinator:
         self.jobs: Dict[str, Job] = {}
         self.events: List[ClusterEvent] = []
         self.monitor = QoSMonitor()
+        # survives re-plans: unchanged gap shapes reuse compiled bg steps
+        self.exec_cache = ExecutableCache()
+        self.interference = InterferenceModel()
+        self.collocation_results: List[CollocationResult] = []
+        self._last_mcfg = MultiplexConfig()  # config of the last collocation
 
     # -- job lifecycle ------------------------------------------------------
 
@@ -73,6 +84,35 @@ class ClusterCoordinator:
             if j.kind == "foreground" and j.status == "running":
                 return j
         return None
+
+    def background_tenants(
+        self, default_step_fn_factory: Optional[Callable] = None
+    ) -> List[BgTenant]:
+        """Running background jobs as a prioritized BgTenant roster.
+
+        A job without its own ``step_fn_factory`` falls back to
+        ``default_step_fn_factory`` (the ``make_bg_step_fn`` passed to
+        ``collocate``); jobs with neither are skipped.  Sorted by priority
+        (higher first), stable in submission order.
+        """
+        out = []
+        for j in self.jobs.values():
+            if j.kind != "background" or j.status != "running":
+                continue
+            factory = j.step_fn_factory or default_step_fn_factory
+            if factory is None:
+                continue
+            sig = None
+            if j.step_fn_factory is None:
+                # shared default factory: scope the executable identity per
+                # job, or two jobs whose chunks happen to land on the same
+                # device range would silently share one compiled step (and
+                # its training state) through the cache
+                sig = (j.name,
+                       getattr(factory, "signature", None) or factory)
+            out.append(BgTenant(j.name, j.priority, factory, signature=sig))
+        out.sort(key=lambda t: -t.priority)
+        return out
 
     def _usable_devices(self) -> int:
         """Largest power of two that fits the healthy set (planner search
@@ -114,7 +154,8 @@ class ClusterCoordinator:
     def simulate_collocation(self, mcfg: Optional[MultiplexConfig] = None):
         fg = self.foreground()
         assert fg is not None and fg.plan is not None
-        sim = MultiplexSim(fg.plan, mcfg or MultiplexConfig(), monitor=self.monitor)
+        sim = MultiplexSim(fg.plan, mcfg or MultiplexConfig(),
+                           self.interference, monitor=self.monitor)
         return sim.run()
 
     def collocate(
@@ -125,6 +166,7 @@ class ClusterCoordinator:
         make_fg_stage_fn: Optional[Callable] = None,
         make_bg_step_fn: Optional[Callable] = None,
         iterations: int = 3,
+        calibrate: bool = False,
     ):
         """Collocate background work into the foreground plan's gaps.
 
@@ -134,26 +176,63 @@ class ClusterCoordinator:
         plan assumes it falls back to the costless ``MultiplexSim`` (logged
         as a 'fallback' ClusterEvent) and returns a ``SimResult`` — both
         expose ``fg_slowdown`` / ``bg_steps_per_iter`` / ``row()``.
+
+        Every running background job becomes a tenant
+        (``background_tenants``), so several ``submit_background`` jobs
+        actually co-run inside the gaps, packed by priority; a job without
+        its own ``step_fn_factory`` uses ``make_bg_step_fn``.  With no
+        background jobs registered, ``make_bg_step_fn`` runs as a single
+        anonymous tenant.  Compiled bg steps go through the coordinator's
+        ``exec_cache`` — after a ``handle_failure``/``handle_join`` re-plan
+        with unchanged gap shapes the jitted steps are reused.
+        ``calibrate=True`` refits ``self.interference`` from the measured
+        result so subsequent ``simulate_collocation`` calls track hardware.
         """
         fg = self.foreground()
         assert fg is not None and fg.plan is not None
+        self._last_mcfg = mcfg or MultiplexConfig()
         if executable:
-            if make_fg_stage_fn is None or make_bg_step_fn is None:
+            tenants = self.background_tenants(make_bg_step_fn)
+            if make_fg_stage_fn is None or (
+                not tenants and make_bg_step_fn is None
+            ):
                 raise ValueError(
-                    "executable collocation needs both make_fg_stage_fn and "
-                    "make_bg_step_fn"
+                    "executable collocation needs make_fg_stage_fn and "
+                    "background work (make_bg_step_fn or submitted "
+                    "background jobs with step_fn_factory)"
                 )
             import jax
 
             if len(jax.devices()) >= fg.plan.num_gpus:
                 col = Collocator(fg.plan, mcfg or MultiplexConfig(),
-                                 monitor=self.monitor)
-                return col.run_executable(
+                                 monitor=self.monitor, tenants=tenants,
+                                 cache=self.exec_cache,
+                                 interference=self.interference)
+                res = col.run_executable(
                     make_fg_stage_fn, make_bg_step_fn, iterations=iterations
                 )
+                self.collocation_results.append(res)
+                if calibrate:
+                    self.interference = col.calibrate(self.collocation_results)
+                return res
             self.events.append(ClusterEvent(
                 time.time(), "fallback",
                 f"executable collocation wants {fg.plan.num_gpus} devices, "
                 f"process has {len(jax.devices())} -> MultiplexSim",
             ))
         return self.simulate_collocation(mcfg)
+
+    def calibrate(self) -> InterferenceModel:
+        """Refit ``self.interference`` from every measured CollocationResult
+        so far (``Collocator.calibrate``), making ``simulate_collocation``
+        track the measured hardware.  Uses the coordinator's live monitor
+        and the config of the last collocation, so feedback bans and pacing
+        limits attribute the measured slowdown to the same gap stages the
+        measurements actually collocated."""
+        fg = self.foreground()
+        assert fg is not None and fg.plan is not None
+        col = Collocator(fg.plan, self._last_mcfg, monitor=self.monitor,
+                         tenants=self.background_tenants(lambda m: None)
+                         or (), interference=self.interference)
+        self.interference = col.calibrate(self.collocation_results)
+        return self.interference

@@ -297,6 +297,7 @@ def block_placements(
     hw: Hardware,
     entry_act_bytes: float,
     num_gpus: int,
+    layer_index: int = -1,
 ) -> tuple:
     """Per-branch device-range assignment for the chosen (g_in, g_out) cell.
 
@@ -309,7 +310,10 @@ def block_placements(
     ``BranchPlacement.parallel`` therefore reports *placed-on-disjoint-
     devices*; the reduction's raw decision stays in
     ``BlockMatrix.branch_parallel``.  Paths cover each branch's top-level
-    chain (nested blocks stay folded into their edge).
+    chain (nested blocks stay folded into their edge).  ``layer_index`` tags
+    each placement with the plan layer whose ``comm_in`` folds this block,
+    so the multiplexer can exclude branch device windows per-stage instead
+    of for the whole iteration.
     """
     from repro.core.plan import BranchPlacement
 
@@ -344,7 +348,7 @@ def block_placements(
                 parallel=parallel,
                 time=float(bm.branch_times[b, g_in_idx, g_out_idx]),
                 gpus=peak, device_start=start, device_end=end, scales=path,
-                demoted=demoted,
+                demoted=demoted, layer_index=layer_index,
             )
         )
     return tuple(out)

@@ -8,6 +8,7 @@ executor applies sharding re-maps and the multiplexer finds gaps.
 from __future__ import annotations
 
 from dataclasses import dataclass, field
+from functools import cached_property
 from typing import Dict, List, Optional, Tuple
 
 
@@ -70,6 +71,10 @@ class BranchPlacement:
     demoted: bool = False  # reduction decided parallel, but the gap window
                            # was full — the planned block time is optimistic
                            # by up to this branch's ``time``
+    layer_index: int = -1  # plan-layer whose ``comm_in`` folds this block:
+                           # the branch devices are busy only during the
+                           # stage containing that layer (-1: unknown ->
+                           # excluded for the whole iteration, conservative)
 
     @property
     def devices(self) -> Tuple[int, int]:
@@ -112,6 +117,38 @@ def complement_ranges(busy, total: int) -> List[Tuple[int, int]]:
     return free
 
 
+def pack_ranges(free, n: int, quantum: int = 1) -> List[Tuple[int, int]]:
+    """Carve up to ``n`` disjoint chunks out of free [start, end) ranges for
+    priority-ordered tenants.
+
+    Every chunk size is a multiple of ``quantum`` (the tenant submesh's model
+    width), chunks never overlap and each lies inside one input range.  The
+    result is sorted largest-first (ties: lower start), so chunk *i* goes to
+    the *i*-th highest-priority tenant.  While there are fewer chunks than
+    tenants, the largest chunk is split in half (quantum-aligned) — two
+    tenants share one big gap rather than one tenant hoarding it.
+    """
+    if n <= 0:
+        return []
+    chunks: List[Tuple[int, int]] = []
+    for s, e in merge_ranges(free):
+        m = (e - s) - (e - s) % quantum
+        if m > 0:
+            chunks.append((s, s + m))
+    if not chunks:
+        return []
+    key = lambda r: (-(r[1] - r[0]), r[0])
+    chunks.sort(key=key)
+    while len(chunks) < n:
+        s, e = chunks[0]
+        if e - s < 2 * quantum:  # largest can't split -> none can
+            break
+        half = ((e - s) // 2 // quantum) * quantum
+        chunks[0:1] = [(s, s + half), (s + half, e)]
+        chunks.sort(key=key)
+    return sorted(chunks[:n], key=key)
+
+
 @dataclass(frozen=True)
 class BurstPlan:
     layers: Tuple[LayerPlan, ...]
@@ -137,7 +174,11 @@ class BurstPlan:
         """vs the same job on a single device (paper Fig 10 x-axis)."""
         return self.single_gpu_time / max(self.total_time, 1e-30)
 
-    def stages(self) -> List[StagePlan]:
+    @cached_property
+    def _stages(self) -> Tuple[StagePlan, ...]:
+        # layers are immutable, so the stage grouping is computed once per
+        # plan (cached_property writes to __dict__, bypassing frozen) — the
+        # per-stage gap scheduling paths call stages() in tight loops
         out: List[StagePlan] = []
         t = 0.0
         cur_first, cur_g, cur_t0 = 0, self.layers[0].gpus, 0.0
@@ -147,42 +188,57 @@ class BurstPlan:
                 cur_first, cur_g, cur_t0 = i, l.gpus, t
             t += l.time
         out.append(StagePlan(cur_first, len(self.layers) - 1, cur_g, cur_t0, t - cur_t0))
-        return out
+        return tuple(out)
+
+    def stages(self) -> List[StagePlan]:
+        return list(self._stages)
 
     def gaps(self) -> List[GapWindow]:
         """Idle-device windows the multiplexer can fill (paper §3.1)."""
         return [
             GapWindow(s.start, s.duration, self.num_gpus - s.gpus, idx)
-            for idx, s in enumerate(self.stages())
+            for idx, s in enumerate(self._stages)
             if s.gpus < self.num_gpus and s.duration > 0.0
         ]
 
     def idle_gpu_sec(self) -> float:
         return sum(g.duration * g.free_gpus for g in self.gaps())
 
-    def branch_device_ranges(self) -> List[Tuple[int, int]]:
+    def branch_device_ranges(
+        self, stage_index: Optional[int] = None
+    ) -> List[Tuple[int, int]]:
         """Device ranges hosting *parallel-placed* ParallelBlock branches.
 
         The critical branch of each block lives in [0, peak) — inside the
         stage's own device window — so only non-critical branches placed on
         disjoint devices widen the busy set.  Demoted branches time-multiplex
-        the critical range and occupy nothing extra."""
+        the critical range and occupy nothing extra.
+
+        With ``stage_index``, only branches whose block is folded into that
+        stage (``BranchPlacement.layer_index`` within the stage's layer
+        span) count as busy — a stage whose branches are idle returns its
+        window to the gap.  Placements with unknown provenance
+        (``layer_index < 0``) stay excluded for every stage, conservative."""
+        st = self._stages[stage_index] if stage_index is not None else None
         out = []
         for v in self.block_details.values():
             if not isinstance(v, tuple):
                 continue
             for p in v:
                 if getattr(p, "parallel", False) and not getattr(p, "critical", False):
-                    out.append((p.device_start, p.device_end))
+                    li = getattr(p, "layer_index", -1)
+                    if st is None or li < 0 or st.first <= li <= st.last:
+                        out.append((p.device_start, p.device_end))
         return merge_ranges(out)
 
     def busy_device_ranges(self, stage_index: int) -> List[Tuple[int, int]]:
         """Devices a background job must avoid during ``stage_index``: the
-        stage's own [0, gpus) plus every parallel branch placement (branch
-        windows are not localized to one stage, so they are excluded for the
-        whole iteration — conservative)."""
-        st = self.stages()[stage_index]
-        return merge_ranges([(0, st.gpus)] + self.branch_device_ranges())
+        stage's own [0, gpus) plus the parallel branch placements whose block
+        executes during this stage (per-stage exclusion)."""
+        st = self._stages[stage_index]
+        return merge_ranges(
+            [(0, st.gpus)] + self.branch_device_ranges(stage_index)
+        )
 
     def free_device_ranges(self, stage_index: int) -> List[Tuple[int, int]]:
         """Device ranges a background job may occupy during ``stage_index``."""
@@ -227,9 +283,11 @@ class StageSharding:
     model_active: whether the 'model' axis does TP work in this stage; if
     False the model axis is a *gap* the multiplexer may fill.
     free_ranges: device-index ranges a background job may occupy during this
-    stage — the complement of the stage's own devices AND of every parallel
-    ParallelBlock branch placement (``plan.block_details``), so collocated
-    work never lands on devices hosting a concurrent branch.
+    stage — the complement of the stage's own devices AND of the parallel
+    ParallelBlock branch placements executing *during this stage*
+    (``plan.block_details``; per-stage exclusion — an idle branch window is
+    returned to the gap), so collocated work never lands on devices hosting
+    a concurrent branch.
     """
 
     stage: StagePlan
@@ -252,11 +310,8 @@ def map_plan_to_mesh(plan: BurstPlan, mesh_axes: Dict[str, int]) -> List[StageSh
     np_ = mesh_axes.get("pod", 1)
     total = nd * nm * np_
     out = []
-    branch = plan.branch_device_ranges()  # hoisted: same for every stage
     for idx, s in enumerate(plan.stages()):
-        free = tuple(complement_ranges(
-            merge_ranges([(0, s.gpus)] + branch), plan.num_gpus
-        ))
+        free = tuple(plan.free_device_ranges(idx))  # per-stage branch windows
         if s.gpus >= total:
             axes = tuple(a for a in ("pod", "data", "model") if a in mesh_axes)
             out.append(StageSharding(s, axes, model_active=True, free_ranges=free))

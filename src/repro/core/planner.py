@@ -483,9 +483,11 @@ def _plan_vectorized(chain, num_gpus, scales, amp_limit, hw) -> BurstPlan:
         if i > 0 and res.edge_blocks[i]:
             cur = idxs[i - 1]
             for b in res.edge_blocks[i]:
+                # the block folds into layer i's comm_in: its branch devices
+                # are busy only during the stage containing layer i
                 details[b.name] = block_placements(
                     b, cur, gi, scales, amp_limit, hw,
-                    res.layers[i - 1].act_bytes, num_gpus,
+                    res.layers[i - 1].act_bytes, num_gpus, layer_index=i,
                 )
                 cur = gi
     from repro.core.graph_reduce import _single_gpu_time
@@ -582,6 +584,7 @@ def plan_encdec(
                     details[b.name] = block_placements(
                         b, cur, gi, scales, amp_limit_, hw,
                         res.layers[i - 1].act_bytes, num_gpus,
+                        layer_index=base + i,
                     )
                     cur = gi
 

@@ -7,14 +7,14 @@ smoke tests and benches see the real (1-device) platform.
 """
 from __future__ import annotations
 
-from dataclasses import dataclass
+from dataclasses import dataclass, field
 from typing import Dict, Optional, Sequence, Tuple
 
 import jax
 import numpy as np
 from jax.sharding import Mesh
 
-from repro.core.plan import complement_ranges, merge_ranges, pow2_floor
+from repro.core.plan import pack_ranges, pow2_floor
 
 
 def make_production_mesh(*, multi_pod: bool = False):
@@ -87,31 +87,43 @@ class PlanSubmeshes:
 
     ``fg_range``/``fg_mesh`` span the plan's peak foreground device usage;
     ``bg`` maps each gap stage to the largest free device range (after
-    excluding parallel-branch placements) and its Mesh.  ``stage_fg_range``
-    gives the foreground's *actual* device window per stage — during a gap
-    stage the fg occupies a strict prefix of ``fg_range``, and every bg
-    range is disjoint from it.
+    excluding parallel-branch placements active in that stage) and its Mesh.
+    ``bg_tenants`` maps each gap stage to the per-tenant carving: up to
+    ``tenants`` disjoint (range, Mesh) slots in priority order (slot 0 =
+    largest chunk = highest-priority tenant); ``bg`` is always slot 0.
+    ``stage_fg_range`` gives the foreground's *actual* device window per
+    stage — during a gap stage the fg occupies a strict prefix of
+    ``fg_range``, and every bg range is disjoint from it.
     """
 
     fg_range: Tuple[int, int]
     fg_mesh: Mesh
     bg: Dict[int, Tuple[Tuple[int, int], Mesh]]
     stage_fg_range: Dict[int, Tuple[int, int]]
+    bg_tenants: Dict[int, Tuple[Tuple[Tuple[int, int], Mesh], ...]] = field(
+        default_factory=dict
+    )
 
     def bg_mesh(self, stage_index: int) -> Optional[Mesh]:
         hit = self.bg.get(stage_index)
         return hit[1] if hit else None
 
+    def tenant_mesh(self, stage_index: int, slot: int) -> Optional[Mesh]:
+        slots = self.bg_tenants.get(stage_index, ())
+        return slots[slot][1] if slot < len(slots) else None
+
 
 def split_mesh_for_plan(plan, *, devices: Optional[Sequence] = None,
-                        fg_model: int = 1, bg_model: int = 1) -> PlanSubmeshes:
+                        fg_model: int = 1, bg_model: int = 1,
+                        tenants: int = 1) -> PlanSubmeshes:
     """Carve the device set into the plan's fg submesh + per-gap bg submeshes.
 
-    For each ``GapWindow`` the bg submesh is built from the largest range in
-    ``plan.free_device_ranges(stage)`` — i.e. the gap's idle devices minus
-    any ``BranchPlacement`` ranges hosting parallel block branches — trimmed
-    to a multiple of ``bg_model``.  Raises when the process has fewer
-    devices than the plan assumes.
+    For each ``GapWindow`` the free set is ``plan.free_device_ranges(stage)``
+    — the gap's idle devices minus any ``BranchPlacement`` ranges hosting
+    parallel block branches *during that stage* — packed into up to
+    ``tenants`` disjoint ``bg_model``-aligned chunks (``pack_ranges``,
+    largest chunk first for the highest-priority tenant).  Raises when the
+    process has fewer devices than the plan assumes.
     """
     devs = list(devices) if devices is not None else jax.devices()
     if len(devs) < plan.num_gpus:
@@ -124,24 +136,20 @@ def split_mesh_for_plan(plan, *, devices: Optional[Sequence] = None,
         fg_model = 1
     fg_mesh = submesh_from_range(0, fg_peak, model=fg_model, devices=devs)
     bg: Dict[int, Tuple[Tuple[int, int], Mesh]] = {}
+    bg_tenants: Dict[int, Tuple[Tuple[Tuple[int, int], Mesh], ...]] = {}
     stage_fg: Dict[int, Tuple[int, int]] = {
         i: (0, s.gpus) for i, s in enumerate(stages)
     }
-    branch = plan.branch_device_ranges()  # hoisted: same for every gap
     for gap in plan.gaps():
-        st = stages[gap.stage_index]
-        free = complement_ranges(
-            merge_ranges([(0, st.gpus)] + branch), plan.num_gpus
-        )
-        if not free:
+        free = plan.free_device_ranges(gap.stage_index)
+        chunks = pack_ranges(free, tenants, quantum=bg_model)
+        if not chunks:
             continue
-        s, e = max(free, key=lambda r: r[1] - r[0])
-        n = (e - s) - (e - s) % bg_model
-        if n <= 0:
-            continue
-        bg[gap.stage_index] = (
-            (s, s + n),
-            submesh_from_range(s, s + n, model=bg_model, devices=devs),
+        slots = tuple(
+            ((s, e), submesh_from_range(s, e, model=bg_model, devices=devs))
+            for s, e in chunks
         )
+        bg_tenants[gap.stage_index] = slots
+        bg[gap.stage_index] = slots[0]
     return PlanSubmeshes(fg_range=(0, fg_peak), fg_mesh=fg_mesh, bg=bg,
-                         stage_fg_range=stage_fg)
+                         stage_fg_range=stage_fg, bg_tenants=bg_tenants)

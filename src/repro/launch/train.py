@@ -1,49 +1,57 @@
 """Training entrypoint.
 
   python -m repro.launch.train --arch llama3-8b [--smoke] [--steps N]
-      [--data N --model N] [--ckpt-dir DIR] [--bg-arch qwen2-1.5b]
+      [--data N --model N] [--ckpt-dir DIR]
+      [--bg-arch qwen2-1.5b [--bg-arch minicpm-2b ...]]
 
 --smoke uses the arch's reduced config on the host devices; the full config
 is exercised via the dry-run (AOT only) per the assignment.  --bg-arch
-enables DeepPool multiplexing: a background job's steps are paced into the
-foreground plan's gaps.
+(repeatable) enables DeepPool multiplexing: each background job's steps are
+paced into the foreground plan's gaps on its own disjoint submesh — the
+first --bg-arch is the highest-priority tenant and gets the largest chunk.
 """
 from __future__ import annotations
 
 import argparse
 import dataclasses
+import itertools
 
 
-def _bg_submesh(fg_devices: int, amp_limit: float, hw, cfg):
-    """Largest plan-gap submesh disjoint from the foreground training mesh.
+def _bg_submeshes(fg_devices: int, amp_limit: float, hw, cfg, n: int):
+    """Per-tenant plan-gap submeshes disjoint from the fg training mesh.
 
     The production plan assumes 256 devices, so the foreground graph is
-    re-planned at the host device count and its gaps carved into submeshes
-    (``split_mesh_for_plan``); the biggest free range that clears the fg
-    mesh's device prefix [0, fg_devices) wins.  Falls back to the raw spare
-    devices when the host plan leaves no usable gap, and to None (plain
-    same-device jit) when every device belongs to the fg mesh."""
+    re-planned at the host device count and its per-stage free device
+    ranges — clipped to clear the fg mesh's prefix [0, fg_devices) — are
+    packed into up to ``n`` disjoint chunks (``pack_ranges``, largest chunk
+    to the first --bg-arch).  Falls back to the raw spare devices when the
+    host plan leaves no usable gap.  Returns ``n`` entries; tenants beyond
+    the packable chunk count get None (plain same-device jit fallback).
+    """
     import jax
 
     from repro.configs import TRAIN_4K
-    from repro.core.plan import pow2_floor
+    from repro.core.plan import pack_ranges, pow2_floor
     from repro.core.planner import plan as make_plan
-    from repro.launch.mesh import split_mesh_for_plan, submesh_from_range
+    from repro.launch.mesh import submesh_from_range
     from repro.models.graph import build_lm_graph
 
     n_dev = len(jax.devices())
     if n_dev <= fg_devices:
-        return None
+        return [None] * n
     host_plan = make_plan(build_lm_graph(cfg, TRAIN_4K), pow2_floor(n_dev),
                           amp_limit, hw)
-    best = None
-    for rng, _mesh in split_mesh_for_plan(host_plan).bg.values():
-        lo, hi = max(rng[0], fg_devices), rng[1]
-        if hi - lo > 0 and (best is None or hi - lo > best[1] - best[0]):
-            best = (lo, hi)
-    if best is None:
-        best = (fg_devices, n_dev)
-    return submesh_from_range(best[0], best[1])
+    free = []
+    for si in range(len(host_plan.stages())):
+        for lo, hi in host_plan.free_device_ranges(si):
+            lo = max(lo, fg_devices)
+            if hi - lo > 0:
+                free.append((lo, hi))
+    if not free:
+        free = [(fg_devices, n_dev)]
+    chunks = pack_ranges(free, n)
+    meshes = [submesh_from_range(lo, hi) for lo, hi in chunks]
+    return meshes + [None] * (n - len(meshes))
 
 
 def main():
@@ -56,7 +64,9 @@ def main():
     ap.add_argument("--data", type=int, default=1)
     ap.add_argument("--model", type=int, default=1)
     ap.add_argument("--ckpt-dir", default=None)
-    ap.add_argument("--bg-arch", default=None)
+    ap.add_argument("--bg-arch", action="append", default=None,
+                    help="background tenant arch; repeat for multiple "
+                         "tenants (first = highest priority)")
     ap.add_argument("--amp-limit", type=float, default=2.0)
     args = ap.parse_args()
 
@@ -85,33 +95,55 @@ def main():
 
     bg_fn = None
     if args.bg_arch:
-        bg_mesh = _bg_submesh(args.data * args.model, args.amp_limit,
-                              coord.hw, cfg)
-        if bg_mesh is not None:
-            # executable collocation: the bg step is jitted onto a gap
-            # submesh disjoint from the foreground training mesh
-            from repro.train.step import bg_step_factory
+        archs = list(args.bg_arch)
+        meshes = _bg_submeshes(args.data * args.model, args.amp_limit,
+                               coord.hw, cfg, len(archs))
+        bg_fns = []
+        for i, (bg_arch, bg_mesh) in enumerate(zip(archs, meshes)):
+            # register the tenant with the coordinator (priority: CLI order,
+            # first --bg-arch highest) so collocate()/re-plans see it
+            coord.submit_background(
+                Job(f"bg{i}-{bg_arch}", "background", [],
+                    priority=len(archs) - i)
+            )
+            if bg_mesh is not None:
+                # executable collocation: the bg step is jitted onto a gap
+                # submesh disjoint from the foreground training mesh
+                from repro.train.step import bg_step_factory
 
-            bg_fn = bg_step_factory(args.bg_arch, batch=4, seq=32,
-                                    seed=1)(bg_mesh)
-            ids = sorted(d.id for d in bg_mesh.devices.flat)
-            print(f"bg job on disjoint submesh devices {ids}")
+                bg_fns.append(bg_step_factory(bg_arch, batch=4, seq=32,
+                                              seed=1 + i)(bg_mesh))
+                ids = sorted(d.id for d in bg_mesh.devices.flat)
+                print(f"bg tenant {i} ({bg_arch}) on disjoint submesh "
+                      f"devices {ids}")
+            else:
+                from repro.models.api import get_model, make_batch
+                from repro.optim.optimizer import make_optimizer
+                from repro.train.state import init_state
+                from repro.train.step import make_train_step
+
+                bcfg = get_config(bg_arch).reduced()
+                bapi = get_model(bcfg)
+                bopt = make_optimizer(bcfg)
+                bstate = init_state(jax.random.PRNGKey(1 + i), bapi, bopt)
+                bstep = jax.jit(make_train_step(bapi, bopt))
+                bbatch = make_batch(jax.random.PRNGKey(2 + i), bcfg, 2, 32)
+                holder = {"state": bstate}
+
+                def same_device_fn(holder=holder, bstep=bstep, bbatch=bbatch):
+                    holder["state"], _ = bstep(holder["state"], bbatch)
+
+                bg_fns.append(same_device_fn)
+                print(f"bg tenant {i} ({bg_arch}) same-device fallback")
+        if len(bg_fns) == 1:
+            bg_fn = bg_fns[0]
         else:
-            from repro.models.api import get_model, make_batch
-            from repro.optim.optimizer import make_optimizer
-            from repro.train.state import init_state
-            from repro.train.step import make_train_step
-
-            bcfg = get_config(args.bg_arch).reduced()
-            bapi = get_model(bcfg)
-            bopt = make_optimizer(bcfg)
-            bstate = init_state(jax.random.PRNGKey(1), bapi, bopt)
-            bstep = jax.jit(make_train_step(bapi, bopt))
-            bbatch = make_batch(jax.random.PRNGKey(2), bcfg, 2, 32)
-            holder = {"state": bstate}
+            # round-robin the tenants through the train loop's single paced
+            # bg slot, highest priority first within each cycle
+            cycle = itertools.cycle(bg_fns)
 
             def bg_fn():
-                holder["state"], _ = bstep(holder["state"], bbatch)
+                next(cycle)()
 
     tc = TrainConfig(steps=args.steps, ckpt_dir=args.ckpt_dir, bg_step_fn=bg_fn)
     report = train(run_cfg, shape, mesh, tc)

@@ -94,6 +94,12 @@ def bg_step_factory(arch: str = "qwen2-1.5b", *, batch: int = 4, seq: int = 8,
     replica and dispatches one step per call.  ``on_loss`` observes each
     step's (device-resident) loss.  Shared by bench_collocation,
     multiplex_demo and the training entrypoint's --bg-arch path.
+
+    The returned factory carries a ``signature`` attribute
+    (``"{arch}-b{batch}-s{seq}-r{seed}"``) identifying the compiled
+    executable for ``ExecutableCache`` reuse across re-plans: two tenants
+    built from factories with equal signatures and landing on the same gap
+    submesh share one jitted step.
     """
     import dataclasses
 
@@ -126,6 +132,7 @@ def bg_step_factory(arch: str = "qwen2-1.5b", *, batch: int = 4, seq: int = 8,
 
         return step
 
+    make_bg_step_fn.signature = f"{arch}-b{batch}-s{seq}-r{seed}"
     return make_bg_step_fn
 
 

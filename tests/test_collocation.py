@@ -69,11 +69,12 @@ def _toy_plan(num_gpus=8, block_details=None):
     )
 
 
-def _placement(start, end, *, parallel=True, critical=False, demoted=False):
+def _placement(start, end, *, parallel=True, critical=False, demoted=False,
+               layer_index=-1):
     return BranchPlacement(
         block="b", branch=0, critical=critical, parallel=parallel, time=1.0,
         gpus=end - start, device_start=start, device_end=end,
-        scales=(end - start,), demoted=demoted,
+        scales=(end - start,), demoted=demoted, layer_index=layer_index,
     )
 
 
@@ -85,6 +86,49 @@ def test_branch_ranges_excluded_from_free_set():
     assert p.busy_device_ranges(0) == [(0, 2), (4, 6)]
     # full-width stage leaves nothing free
     assert p.free_device_ranges(1) == []
+
+
+def test_branch_exclusion_is_per_stage():
+    """Regression: a branch window is busy only during the stage whose layer
+    folds its block — other stages reclaim the range for the gap pool."""
+    mk = lambda i, g: LayerPlan(index=i, name=f"l{i}", gpus=g, time=1.0,
+                                comp=1.0, sync=0.0, comm_in=0.0, amp=1.0)
+    p = BurstPlan(
+        layers=(mk(0, 2), mk(1, 4)),
+        num_gpus=8,
+        amp_limit=2.0,
+        single_gpu_time=2.0,
+        # block folded into layer 1 (stage 1): devices [5, 7) busy there only
+        block_details={"b": (_placement(5, 7, layer_index=1),)},
+    )
+    # stage 0 (layers 0-0): branches idle -> the window returns to the gap
+    assert p.branch_device_ranges(0) == []
+    assert p.free_device_ranges(0) == [(2, 8)]  # reclaimed range pinned
+    # stage 1 (layers 1-1): branch active -> excluded
+    assert p.branch_device_ranges(1) == [(5, 7)]
+    assert p.free_device_ranges(1) == [(4, 5), (7, 8)]
+    # iteration-wide view (no stage) stays conservative
+    assert p.branch_device_ranges() == [(5, 7)]
+    # unknown provenance (layer_index=-1) is excluded everywhere
+    p2 = BurstPlan(
+        layers=(mk(0, 2), mk(1, 4)), num_gpus=8, amp_limit=2.0,
+        single_gpu_time=2.0, block_details={"b": (_placement(5, 7),)},
+    )
+    assert p2.free_device_ranges(0) == [(2, 5), (7, 8)]
+
+
+def test_planner_assigns_branch_layer_indices():
+    """Real planned DAGs tag every placement with its folding layer, so the
+    per-stage exclusion actually engages (no -1 conservative fallback)."""
+    p = plan(build_inception_like_graph(32, n_blocks=3), 16, amp_limit=2.0,
+             hw=A100)
+    placements = [
+        pl for v in p.block_details.values() if isinstance(v, tuple)
+        for pl in v
+    ]
+    assert placements
+    for pl in placements:
+        assert 0 <= pl.layer_index < len(p.layers)
 
 
 def test_critical_and_demoted_branches_do_not_widen_busy_set():
@@ -108,12 +152,13 @@ def test_map_plan_to_mesh_carries_free_ranges():
 
 
 def test_planner_dag_branch_ranges_flow_to_stage_shardings():
-    """A real planned DAG: parallel branch placements leave the bg pool."""
+    """A real planned DAG: parallel branch placements leave the bg pool of
+    exactly the stages whose layers fold them (per-stage exclusion)."""
     p = plan(build_inception_like_graph(32, n_blocks=3), 16, amp_limit=2.0,
              hw=A100)
-    branch = p.branch_device_ranges()
     for idx in range(len(p.stages())):
         free = p.free_device_ranges(idx)
+        branch = p.branch_device_ranges(idx)  # active in THIS stage
         for fs, fe in free:
             for bs, be in branch:
                 assert fe <= bs or fs >= be  # disjoint from branch hosts
@@ -121,6 +166,12 @@ def test_planner_dag_branch_ranges_flow_to_stage_shardings():
         busy = p.busy_device_ranges(idx)
         covered = sorted(busy + free)
         assert sum(e - s for s, e in covered) == p.num_gpus
+    # per-stage exclusion is no looser than the iteration-wide union: every
+    # stage-active branch range appears in the global set
+    global_branch = p.branch_device_ranges()
+    for idx in range(len(p.stages())):
+        for bs, be in p.branch_device_ranges(idx):
+            assert any(gs <= bs and be <= ge for gs, ge in global_branch)
 
 
 def test_coordinator_collocate_fallback_and_validation():
@@ -178,6 +229,40 @@ def test_submesh_disjointness_multidevice():
         submesh_from_range(4, 4)
     with pytest.raises(ValueError):
         submesh_from_range(0, 3, model=2)  # 3 not divisible by model
+
+
+def test_split_mesh_multi_tenant_disjointness():
+    """tenants=k carves each gap into k disjoint per-tenant submeshes, all
+    disjoint from the stage's fg window (tier1-multidevice job)."""
+    if _ndev() < 8:
+        pytest.skip("needs 8 devices (tier1-multidevice job)")
+    from repro.launch.mesh import split_mesh_for_plan
+
+    p = plan(build_vgg_graph(VCFG, 32), 8, amp_limit=1.5, hw=A100)
+    split = split_mesh_for_plan(p, tenants=2)
+    assert split.bg_tenants, "vgg plan should expose tenant submeshes"
+    fg_devs = list(split.fg_mesh.devices.flat)
+    two_tenant_gaps = 0
+    for si, slots in split.bg_tenants.items():
+        lo, hi = split.stage_fg_range[si]
+        stage_fg_ids = {d.id for d in fg_devs[lo:hi]}
+        seen: set = set()
+        sizes = []
+        for rng, mesh in slots:
+            ids = {d.id for d in mesh.devices.flat}
+            assert ids and len(ids) == rng[1] - rng[0]
+            assert not (ids & stage_fg_ids)   # never on fg devices
+            assert not (ids & seen)           # tenants pairwise disjoint
+            seen |= ids
+            sizes.append(len(ids))
+        # priority packing: slot 0 (highest priority) gets the biggest chunk
+        assert sizes == sorted(sizes, reverse=True)
+        two_tenant_gaps += len(slots) >= 2
+        # the legacy single-tenant view mirrors slot 0
+        assert split.bg[si] == slots[0]
+        assert split.tenant_mesh(si, 0) is slots[0][1]
+        assert split.tenant_mesh(si, 99) is None
+    assert two_tenant_gaps > 0  # at least one gap big enough to share
 
 
 def test_largest_pow2_mesh_non_pow2_counts():

@@ -1,4 +1,5 @@
-"""Multiplexing (paper §5): ablation ordering, pacing, feedback loop."""
+"""Multiplexing (paper §5): ablation ordering, pacing, feedback loop,
+multi-tenant gap scheduling, executable caching and calibration."""
 from dataclasses import replace
 
 import pytest
@@ -6,7 +7,10 @@ import pytest
 from repro.configs.vgg16 import CONFIG as VCFG
 from repro.core.costmodel import A100
 from repro.core.multiplex import (
+    BgTenant,
     Collocator,
+    CollocationResult,
+    ExecutableCache,
     InterferenceModel,
     MultiplexConfig,
     MultiplexSim,
@@ -109,3 +113,155 @@ def test_collocator_respects_feedback(vgg_plan):
     col.monitor.record(op, 10.0, collocated=True)
     sched = dict(col.schedule())
     assert banned_stage not in sched
+
+
+# -- multi-tenant gap scheduling ---------------------------------------------
+
+
+def _tenants(n, base_priority=0):
+    return [BgTenant(f"job{i}", base_priority + n - i, lambda m: (lambda: None))
+            for i in range(n)]
+
+
+def test_collocator_orders_tenants_by_priority(vgg_plan):
+    low = BgTenant("low", 1, lambda m: (lambda: None))
+    high = BgTenant("high", 9, lambda m: (lambda: None))
+    mid_a = BgTenant("mid_a", 5, lambda m: (lambda: None))
+    mid_b = BgTenant("mid_b", 5, lambda m: (lambda: None))
+    col = Collocator(vgg_plan, MultiplexConfig(), tenants=[low, mid_a, mid_b, high])
+    # slot 0 = highest priority; equal priorities keep submission order
+    assert [t.job for t in col.tenants] == ["high", "mid_a", "mid_b", "low"]
+
+
+def test_schedule_tenants_packs_by_priority(vgg_plan):
+    col = Collocator(vgg_plan, MultiplexConfig(max_inflight=2),
+                     tenants=_tenants(2))
+    sched = col.schedule_tenants()
+    assert sched, "vgg plan gaps must admit tenants"
+    single = dict(col.schedule())
+    by_stage = {}
+    for si, slot, n in sched:
+        assert n <= 2  # pacing bound per tenant
+        by_stage.setdefault(si, []).append((slot, n))
+    gap_stages = {g.stage_index for g in vgg_plan.gaps()}
+    assert set(by_stage) <= gap_stages
+    for si, slots in by_stage.items():
+        # same paced step count as the single-tenant schedule, per tenant
+        assert all(n == single[si] for _, n in slots)
+        # slots are 0..k-1 (priority-ordered chunks)
+        assert [s for s, _ in sorted(slots)] == list(range(len(slots)))
+    # at least one gap is wide enough for both tenants to co-run
+    assert any(len(s) == 2 for s in by_stage.values())
+    # feedback ban empties the whole gap for every tenant
+    banned = sched[0][0]
+    col.monitor.record_baseline(f"stage{banned}", 1.0)
+    col.monitor.record(f"stage{banned}", 10.0, collocated=True)
+    assert all(si != banned for si, _, _ in col.schedule_tenants())
+
+
+def test_schedule_tenants_never_exceeds_free_devices(vgg_plan):
+    from repro.core.plan import pack_ranges
+
+    for n in (1, 2, 3, 8):
+        col = Collocator(vgg_plan, MultiplexConfig(), tenants=_tenants(n))
+        sched = col.schedule_tenants()
+        for si, slot, _ in sched:
+            free = vgg_plan.free_device_ranges(si)
+            chunks = pack_ranges(free, n)
+            assert slot < len(chunks)  # a slot only exists if it got devices
+
+
+def test_executable_cache_semantics():
+    cache = ExecutableCache()
+    built = []
+
+    def build_a():
+        built.append("a")
+        return lambda: "a"
+
+    k1 = ("sigA", (0, 1), (2, 1))
+    assert cache.get_or_build(k1, build_a)() == "a"
+    assert (cache.hits, cache.misses) == (0, 1)
+    # same key -> reuse, no rebuild
+    assert cache.get_or_build(k1, build_a)() == "a"
+    assert (cache.hits, cache.misses) == (1, 1)
+    assert built == ["a"]
+    # different device ids or shape -> distinct executable
+    cache.get_or_build(("sigA", (2, 3), (2, 1)), build_a)
+    cache.get_or_build(("sigB", (0, 1), (2, 1)), build_a)
+    assert (cache.hits, cache.misses) == (1, 3)
+
+
+def test_bg_tenant_cache_signature_fallbacks():
+    def factory(mesh):
+        return lambda: None
+
+    def other_factory(mesh):
+        return lambda: None
+
+    # untagged factories key on the factory OBJECT: two different factories
+    # under the same job name never share a compiled executable
+    assert BgTenant("jobX", 0, factory).cache_signature is factory
+    assert (BgTenant("jobX", 0, factory).cache_signature
+            != BgTenant("jobX", 0, other_factory).cache_signature)
+    factory.signature = "arch-b4-s8"
+    assert BgTenant("jobX", 0, factory).cache_signature == "arch-b4-s8"
+    assert BgTenant("jobX", 0, factory,
+                    signature="explicit").cache_signature == "explicit"
+    # no factory at all: fall back to the job name
+    assert BgTenant("jobY", 0).cache_signature == "jobY"
+
+
+# -- calibration -------------------------------------------------------------
+
+
+def _measured(slowdown, steps=6.0):
+    return CollocationResult(
+        fg_iter_time=slowdown, fg_iter_time_isolated=1.0,
+        fg_slowdown=slowdown, bg_steps_per_iter=steps,
+        bg_throughput=steps / slowdown, iterations=3,
+    )
+
+
+def test_calibrate_inverts_to_measured_slowdown(vgg_plan):
+    col = Collocator(vgg_plan, MultiplexConfig(max_inflight=2),
+                     tenants=_tenants(2))
+    model = col.calibrate([_measured(1.20)])
+    assert model.gap_inflation > 1.0
+    pred = col.predict()
+    # closed-form inversion: prediction reproduces the measurement exactly
+    assert pred.fg_slowdown == pytest.approx(1.20, abs=1e-9)
+    assert pred.iterations == 0  # marked as predicted, not measured
+    # predicted steps mirror the tenant schedule
+    sched = col.schedule_tenants()
+    assert pred.bg_steps_per_iter == pytest.approx(
+        sum(n for _, _, n in sched))
+    assert len(pred.tenants) == 2
+    # admission-control what-if beyond the roster: placeholder rows keep
+    # per-tenant steps summing to the aggregate (no phantom slots)
+    pred3 = col.predict(n_tenants=3)
+    assert len(pred3.tenants) == 3
+    assert sum(t.bg_steps_per_iter for t in pred3.tenants) == pytest.approx(
+        pred3.bg_steps_per_iter)
+    # geometric mean over several results; sub-1.0 measurements clamp
+    m2 = col.calibrate([_measured(1.2), _measured(1.2), _measured(0.8)])
+    assert 1.0 < m2.gap_inflation < model.gap_inflation
+    # no measured results -> model unchanged
+    assert col.calibrate([]) is m2
+    # predictions without measurements are excluded
+    assert col.calibrate([pred]) is m2
+
+
+def test_calibrated_model_flows_into_sim(vgg_plan):
+    cfg = MultiplexConfig(collocate_same_device=False)
+    base = MultiplexSim(vgg_plan, cfg, InterferenceModel()).run(10)
+    cal = MultiplexSim(
+        vgg_plan, cfg, InterferenceModel(gap_inflation=1.5)
+    ).run(10)
+    assert cal.fg_slowdown > base.fg_slowdown  # gap stages inflate
+    # same-device (GPU) mode ignores the submesh multiplier
+    gpu_cfg = MultiplexConfig(collocate_same_device=True)
+    a = MultiplexSim(vgg_plan, gpu_cfg, InterferenceModel()).run(10)
+    b = MultiplexSim(vgg_plan, gpu_cfg,
+                     InterferenceModel(gap_inflation=1.5)).run(10)
+    assert a.fg_slowdown == pytest.approx(b.fg_slowdown)

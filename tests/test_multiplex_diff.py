@@ -1,0 +1,183 @@
+"""Seeded differential tests for the multi-tenant gap scheduler.
+
+Three contracts, all on the 8-host-device smoke configs (subprocesses with a
+forced host device count, like tests/test_collocation.py):
+
+1. Calibration: after ``Collocator.calibrate`` on a measured
+   ``CollocationResult``, the analytic ``predict()`` must agree with the
+   measurement — fg slowdown within ``SLOWDOWN_TOL`` (absolute) and bg
+   steps/iter within ``STEPS_REL_TOL`` (relative) — and the calibrated
+   ``MultiplexSim.run`` submesh path must land within ``SIM_SLOWDOWN_TOL``.
+2. Executable-cache transparency: a cache-hit run must produce the same
+   tenant schedule and per-tenant launched step counts as the cache-miss
+   run that populated it (feedback off, so the schedule is deterministic).
+3. Re-plan reuse: a ``ClusterCoordinator`` re-plan with an unchanged gap
+   shape must hit the executable cache instead of rebuilding bg steps
+   (the acceptance criterion for executable reuse).
+"""
+import os
+import subprocess
+import sys
+import textwrap
+
+SRC = os.path.join(os.path.dirname(__file__), "..", "src")
+
+# stated tolerances (contract 1)
+SLOWDOWN_TOL = 0.15      # predict() vs measured fg slowdown, absolute
+STEPS_REL_TOL = 1e-6     # predict() vs measured bg steps/iter (feedback off:
+                         # the executable launches exactly the schedule)
+SIM_SLOWDOWN_TOL = 0.40  # MultiplexSim.run (adds overrun modeling), absolute
+
+
+def _run(code: str, devices: int = 8, timeout: int = 900):
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={devices}"
+    env["PYTHONPATH"] = SRC + os.pathsep + env.get("PYTHONPATH", "")
+    r = subprocess.run([sys.executable, "-c", textwrap.dedent(code)],
+                       capture_output=True, text=True, timeout=timeout, env=env)
+    assert r.returncode == 0, r.stderr[-3000:]
+    return r.stdout
+
+
+_PRELUDE = """
+    import jax, jax.numpy as jnp
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    from repro.configs.vgg16 import CONFIG as VCFG
+    from repro.core.costmodel import A100
+    from repro.core.multiplex import (
+        BgTenant, Collocator, ExecutableCache, MultiplexConfig, MultiplexSim,
+    )
+    from repro.core.planner import plan
+    from repro.models.graph import build_vgg_graph
+
+    p = plan(build_vgg_graph(VCFG, 32), 8, amp_limit=1.5, hw=A100)
+
+    def make_fg(stage, mesh):
+        x = jax.device_put(jnp.full((128, 128), 0.01),
+                           NamedSharding(mesh, P(None, None)))
+        f = jax.jit(lambda x: jnp.tanh(x @ x).sum())
+        return lambda: f(x)
+
+    def mk_factory(sig):
+        def factory(mesh):
+            x = jax.device_put(jnp.ones((32, 32)),
+                               NamedSharding(mesh, P(None, None)))
+            g = jax.jit(lambda x: (x @ x).sum())
+            return lambda: g(x)
+        factory.signature = sig
+        return factory
+
+    tenants = [BgTenant("jobA", 2, mk_factory("A")),
+               BgTenant("jobB", 1, mk_factory("B"))]
+    cfg = MultiplexConfig(max_inflight=2, use_feedback=False)
+"""
+
+
+def test_calibrated_prediction_tracks_measurement():
+    out = _run(_PRELUDE + f"""
+    col = Collocator(p, cfg, tenants=tenants)
+    res = col.run_executable(make_fg, iterations=3)
+    assert res.bg_steps_per_iter > 0, res
+
+    model = col.calibrate([res])
+    assert model.gap_inflation >= 1.0
+    pred = col.predict()
+
+    # predict() replays the same tenant schedule through the fitted model:
+    # slowdown within {SLOWDOWN_TOL} abs (calibration clamps measured
+    # slowdown at 1.0), steps/iter exact (feedback off -> the executable
+    # launched exactly the schedule every iteration)
+    meas_s = max(res.fg_slowdown, 1.0)
+    assert abs(pred.fg_slowdown - meas_s) <= {SLOWDOWN_TOL}, (
+        pred.fg_slowdown, res.fg_slowdown)
+    assert abs(pred.bg_steps_per_iter - res.bg_steps_per_iter) <= (
+        {STEPS_REL_TOL} * max(res.bg_steps_per_iter, 1.0)), (
+        pred.bg_steps_per_iter, res.bg_steps_per_iter)
+    # per-tenant prediction matches per-tenant measurement
+    for pt, mt in zip(pred.tenants, res.tenants):
+        assert pt.job == mt.job
+        assert abs(pt.bg_steps_per_iter - mt.bg_steps_per_iter) <= 1e-6
+
+    # the calibrated discrete-event sim tracks the measured slowdown too
+    # (looser: it adds non-preemptive overrun modeling on top)
+    sim = MultiplexSim(p, cfg, model).run(20)
+    assert abs(sim.fg_slowdown - meas_s) <= {SIM_SLOWDOWN_TOL}, (
+        sim.fg_slowdown, meas_s)
+    print("OK", pred.fg_slowdown, res.fg_slowdown, sim.fg_slowdown)
+    """)
+    assert "OK" in out
+
+
+def test_cache_hit_vs_miss_identical_schedules():
+    out = _run(_PRELUDE + """
+    cache = ExecutableCache()
+    col1 = Collocator(p, cfg, tenants=tenants, cache=cache)
+    res1 = col1.run_executable(make_fg, iterations=2)
+    assert res1.cache_misses > 0 and res1.bg_steps_per_iter > 0
+    miss_after_first = cache.misses
+
+    col2 = Collocator(p, cfg, tenants=tenants, cache=cache)
+    res2 = col2.run_executable(make_fg, iterations=2)
+    # warm cache: every bg step fn is reused, none rebuilt
+    assert cache.misses == miss_after_first, (cache.misses, miss_after_first)
+    assert res2.cache_misses == 0 and res2.cache_hits > 0
+
+    # identical schedules: same (stage, slot, n) triples...
+    assert col1.schedule_tenants() == col2.schedule_tenants()
+    # ...and identical launched work per tenant and per iteration
+    for t1, t2 in zip(res1.tenants, res2.tenants):
+        assert t1.job == t2.job and t1.gap_stages == t2.gap_stages
+        assert abs(t1.bg_steps_per_iter - t2.bg_steps_per_iter) <= 1e-9
+        assert t1.devices == t2.devices
+    assert [n for _, n in res1.iter_details] == \
+        [n for _, n in res2.iter_details]
+    print("OK", res1.bg_steps_per_iter, res2.bg_steps_per_iter)
+    """)
+    assert "OK" in out
+
+
+def test_replan_unchanged_gap_shape_hits_cache():
+    out = _run(_PRELUDE + """
+    from repro.core.coordinator import ClusterCoordinator, Job
+
+    coord = ClusterCoordinator(8)
+    coord.submit_foreground(
+        Job("fg", "foreground", build_vgg_graph(VCFG, 32), amp_limit=1.5)
+    )
+    coord.submit_background(
+        Job("bgA", "background", [], priority=2, step_fn_factory=mk_factory("A"))
+    )
+    coord.submit_background(
+        Job("bgB", "background", [], priority=1, step_fn_factory=mk_factory("B"))
+    )
+    res1 = coord.collocate(cfg, executable=True, make_fg_stage_fn=make_fg)
+    assert res1.iterations > 0 and res1.bg_steps_per_iter > 0
+    # both submitted background jobs actually co-ran in the gaps
+    assert len(res1.tenants) == 2
+    assert all(t.bg_steps_per_iter > 0 for t in res1.tenants), res1.tenants
+    assert res1.tenants[0].job == "bgA"  # priority order
+    assert res1.cache_misses > 0 and coord.exec_cache.misses > 0
+    misses = coord.exec_cache.misses
+
+    # elastic no-op re-plan: same healthy set -> identical plan -> identical
+    # gap submesh shapes -> compiled bg steps are reused, not rebuilt
+    plan_before = coord.foreground().plan
+    coord.handle_join([])
+    assert coord.foreground().plan.layers == plan_before.layers
+    res2 = coord.collocate(cfg, executable=True, make_fg_stage_fn=make_fg)
+    assert coord.exec_cache.misses == misses, (coord.exec_cache.misses, misses)
+    assert res2.cache_misses == 0 and res2.cache_hits >= res1.cache_misses
+
+    # a real failure changes the plan (8 -> 4 devices): new gap shapes may
+    # compile, but a join back to the original set hits the cache again
+    coord.handle_failure(7)
+    coord.collocate(cfg, executable=True, make_fg_stage_fn=make_fg)
+    misses_small = coord.exec_cache.misses
+    coord.handle_join([7])
+    assert coord.foreground().plan.layers == plan_before.layers
+    res4 = coord.collocate(cfg, executable=True, make_fg_stage_fn=make_fg)
+    assert coord.exec_cache.misses == misses_small
+    assert res4.cache_misses == 0 and res4.cache_hits > 0
+    print("OK", res1.bg_steps_per_iter, res4.bg_steps_per_iter)
+    """)
+    assert "OK" in out

@@ -1,0 +1,146 @@
+"""Property-based tests for device-range arithmetic and multi-tenant gap
+packing (hypothesis when installed, the deterministic tests/_prop.py shim
+otherwise).
+
+Invariants:
+  merge_ranges      — sorted, pairwise-disjoint (no touching), idempotent,
+                      covers exactly the union of its inputs.
+  complement_ranges — tiles [0, total) exactly against the merged busy set.
+  pack_ranges       — chunks are disjoint, quantum-aligned, inside the free
+                      set, sorted largest-first, at most n of them.
+  plan packing      — for random BurstPlans with random BranchPlacements,
+                      tenant chunks never overlap the stage's fg devices or
+                      the branch windows active in that stage.
+"""
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # tier-1 must collect without hypothesis
+    from _prop import given, settings, strategies as st
+
+from repro.core.plan import (
+    BranchPlacement,
+    BurstPlan,
+    LayerPlan,
+    complement_ranges,
+    merge_ranges,
+    pack_ranges,
+)
+
+MAX_EXAMPLES = 60
+
+raw_range = st.builds(lambda a, b: (a, b), st.integers(0, 40), st.integers(0, 40))
+range_lists = st.lists(raw_range, min_size=0, max_size=8)
+
+
+def _covered(ranges, p):
+    return any(s <= p < e for s, e in ranges)
+
+
+@settings(max_examples=MAX_EXAMPLES, deadline=None)
+@given(range_lists)
+def test_merge_ranges_invariants(ranges):
+    merged = merge_ranges(ranges)
+    # sorted + strictly disjoint (touching ranges are coalesced)
+    for (s1, e1), (s2, e2) in zip(merged, merged[1:]):
+        assert e1 < s2
+    for s, e in merged:
+        assert s < e
+    # idempotent
+    assert merge_ranges(merged) == merged
+    # pointwise coverage identical to the union of the inputs
+    for p in range(42):
+        assert _covered(merged, p) == _covered(ranges, p)
+
+
+@settings(max_examples=MAX_EXAMPLES, deadline=None)
+@given(range_lists, st.integers(1, 40))
+def test_complement_ranges_tiles_exactly(busy, total):
+    free = complement_ranges(busy, total)
+    merged = merge_ranges(busy)
+    clipped = [(max(0, s), min(e, total)) for s, e in merged]
+    clipped = [(s, e) for s, e in clipped if e > s]
+    # free + clipped busy tile [0, total): every point in exactly one side
+    for p in range(total):
+        assert _covered(free, p) != _covered(clipped, p)
+    # complement is itself merged (disjoint + sorted) and involutive
+    assert merge_ranges(free) == free
+    assert complement_ranges(free, total) == clipped
+
+
+@settings(max_examples=MAX_EXAMPLES, deadline=None)
+@given(range_lists, st.integers(1, 5), st.integers(1, 4))
+def test_pack_ranges_invariants(free, n, quantum):
+    chunks = pack_ranges(free, n, quantum=quantum)
+    assert len(chunks) <= n
+    merged_free = merge_ranges(free)
+    sizes = [e - s for s, e in chunks]
+    # quantum-aligned sizes, each chunk inside one free range
+    for (s, e), size in zip(chunks, sizes):
+        assert size > 0 and size % quantum == 0
+        assert any(fs <= s and e <= fe for fs, fe in merged_free)
+    # largest-first (priority slot 0 gets the biggest chunk)
+    assert sizes == sorted(sizes, reverse=True)
+    # pairwise disjoint
+    ordered = sorted(chunks)
+    for (s1, e1), (s2, e2) in zip(ordered, ordered[1:]):
+        assert e1 <= s2
+
+
+# -- random plans: tenant packing never overlaps fg or branch devices --------
+
+
+def _random_plan(num_gpus, layer_gpus, placements):
+    layers = tuple(
+        LayerPlan(index=i, name=f"l{i}", gpus=min(g, num_gpus), time=1.0,
+                  comp=1.0, sync=0.0, comm_in=0.0, amp=1.0)
+        for i, g in enumerate(layer_gpus)
+    )
+    details = {}
+    for j, (start, width, parallel, layer_index) in enumerate(placements):
+        start = start % num_gpus
+        end = min(start + 1 + width, num_gpus)
+        if end <= start:
+            continue
+        details[f"b{j}"] = (
+            BranchPlacement(
+                block=f"b{j}", branch=0, critical=False, parallel=parallel,
+                time=1.0, gpus=end - start, device_start=start,
+                device_end=end, scales=(end - start,),
+                layer_index=layer_index % (len(layers) + 1) - 1,
+            ),
+        )
+    return BurstPlan(layers=layers, num_gpus=num_gpus, amp_limit=2.0,
+                     single_gpu_time=float(len(layers)),
+                     block_details=details)
+
+
+plan_strategy = st.builds(
+    _random_plan,
+    st.sampled_from([4, 8, 16]),
+    st.lists(st.sampled_from([1, 2, 4, 8, 16]), min_size=1, max_size=6),
+    st.lists(
+        st.builds(lambda a, b, c, d: (a, b, c, d),
+                  st.integers(0, 15), st.integers(0, 7),
+                  st.sampled_from([True, False]), st.integers(0, 6)),
+        min_size=0, max_size=3,
+    ),
+)
+
+
+@settings(max_examples=MAX_EXAMPLES, deadline=None)
+@given(plan_strategy, st.integers(1, 4), st.integers(1, 2))
+def test_tenant_packing_never_overlaps_fg_or_branches(plan, n, quantum):
+    for si, stage in enumerate(plan.stages()):
+        busy = plan.busy_device_ranges(si)
+        free = plan.free_device_ranges(si)
+        chunks = pack_ranges(free, n, quantum=quantum)
+        for s, e in chunks:
+            assert 0 <= s < e <= plan.num_gpus
+            # never on the stage's own fg devices
+            assert e <= stage.gpus or s >= stage.gpus
+            # never on any busy range (fg prefix or active branch window)
+            for bs, be in busy:
+                assert e <= bs or s >= be
+        # fg + branches + free tile the machine exactly
+        assert (sum(e - s for s, e in busy) + sum(e - s for s, e in free)
+                == plan.num_gpus)
