@@ -8,12 +8,14 @@ pure function of (graph, G, amp_limit).
 """
 from __future__ import annotations
 
+import dataclasses
 import time
 from dataclasses import dataclass, field
 from typing import Callable, Dict, List, Optional
 
 from repro.core.costmodel import Hardware
 from repro.core.multiplex import (
+    AdmissionDecision,
     BgTenant,
     Collocator,
     CollocationResult,
@@ -25,6 +27,9 @@ from repro.core.multiplex import (
 )
 from repro.core.plan import BurstPlan
 from repro.core.planner import plan as make_plan
+
+# paper §5: the fg slowdown the QoS/admission machinery must hold
+QOS_SLOWDOWN_BOUND = 1.33
 
 
 @dataclass
@@ -63,6 +68,7 @@ class ClusterCoordinator:
         self.interference = InterferenceModel()
         self.collocation_results: List[CollocationResult] = []
         self._last_mcfg = MultiplexConfig()  # config of the last collocation
+        self.last_admission: Optional[AdmissionDecision] = None
 
     # -- job lifecycle ------------------------------------------------------
 
@@ -125,14 +131,20 @@ class ClusterCoordinator:
 
     def handle_failure(self, device_id: int) -> Optional[BurstPlan]:
         """Device loss: shrink the healthy set and re-plan the foreground
-        job onto the surviving power-of-two subset. Returns the new plan."""
+        job onto the surviving power-of-two subset. Returns the new plan.
+        Compiled bg steps whose submesh touched the dead device are evicted
+        from the executable cache — their device-committed state is gone, so
+        holding them alive would only pin dead jitted state."""
         self.healthy.discard(device_id)
         self.events.append(ClusterEvent(time.time(), "failure", f"device {device_id}"))
+        self._evict_stale_executables()
         fg = self.foreground()
         if fg is None:
             return None
+        old = fg.plan
         fg.plan = make_plan(fg.graph, self._usable_devices(), fg.amp_limit, self.hw)
         fg.devices = tuple(sorted(self.healthy))
+        self._drop_stale_measurements(old, fg.plan)
         self.events.append(
             ClusterEvent(time.time(), "replan", f"G={fg.plan.num_gpus}")
         )
@@ -142,12 +154,55 @@ class ClusterCoordinator:
         """Elastic scale-up: devices join, re-plan to exploit them."""
         self.healthy.update(device_ids)
         self.events.append(ClusterEvent(time.time(), "join", f"+{len(device_ids)}"))
+        self._evict_stale_executables()
         fg = self.foreground()
         if fg is None:
             return None
+        old = fg.plan
         fg.plan = make_plan(fg.graph, self._usable_devices(), fg.amp_limit, self.hw)
         fg.devices = tuple(sorted(self.healthy))
+        self._drop_stale_measurements(old, fg.plan)
         return fg.plan
+
+    def _drop_stale_measurements(self, old: Optional[BurstPlan],
+                                 new: Optional[BurstPlan]) -> None:
+        """A re-plan that actually changed the foreground plan invalidates
+        the accumulated CollocationResults: their per-stage slowdowns (and
+        schedules) describe the old plan's stages, and feeding them to
+        ``calibrate`` would attribute interference to the wrong stages of
+        the new plan.  The fitted per-stage inflation vector is stale for
+        the same reason (keyed by old-plan stage indices) and is dropped
+        too; the scalar ``gap_inflation`` survives — it measures the host,
+        not the plan shape, and is the best prior for the next admission
+        sweep until the new plan is measured.  A no-op re-plan (identical
+        layer tuple) keeps everything."""
+        if old is not None and new is not None and old.layers != new.layers:
+            self.collocation_results.clear()
+            if self.interference.gap_inflation_stages:
+                self.interference = dataclasses.replace(
+                    self.interference, gap_inflation_stages=()
+                )
+
+    def _evict_stale_executables(self) -> int:
+        """Drop executable-cache entries whose submesh uses a device outside
+        the healthy set (device indices mapped positionally onto the process
+        device list, the same positional contract ``submesh_from_range``
+        uses).  No-op when the cache is empty or jax is unavailable."""
+        if not self.exec_cache.entries:
+            return 0
+        try:
+            import jax
+
+            devs = jax.devices()
+        except Exception:
+            return 0
+        live = {devs[i].id for i in self.healthy if i < len(devs)}
+        n = self.exec_cache.evict_stale(live)
+        if n:
+            self.events.append(
+                ClusterEvent(time.time(), "evict", f"{n} stale executables")
+            )
+        return n
 
     # -- multiplexing -------------------------------------------------------
 
@@ -167,6 +222,7 @@ class ClusterCoordinator:
         make_bg_step_fn: Optional[Callable] = None,
         iterations: int = 3,
         calibrate: bool = False,
+        admission_bound: Optional[float] = QOS_SLOWDOWN_BOUND,
     ):
         """Collocate background work into the foreground plan's gaps.
 
@@ -187,6 +243,17 @@ class ClusterCoordinator:
         with unchanged gap shapes the jitted steps are reused.
         ``calibrate=True`` refits ``self.interference`` from the measured
         result so subsequent ``simulate_collocation`` calls track hardware.
+
+        Admission control runs *before anything compiles*: the candidate
+        roster is swept through the calibrated ``Collocator.predict`` and
+        only the argmax-cluster-throughput prefix whose predicted fg
+        slowdown stays within ``admission_bound`` (paper §5: 1.33x) is
+        compiled and run — rejected tenants are reported on
+        ``CollocationResult.rejected_tenants`` and logged as an 'admission'
+        ClusterEvent, and never touch the executable cache.  With an
+        uncalibrated model (``gap_inflation`` 1.0) every tenant is
+        predicted harmless and admitted.  ``admission_bound=None`` disables
+        the sweep.
         """
         fg = self.foreground()
         assert fg is not None and fg.plan is not None
@@ -203,14 +270,53 @@ class ClusterCoordinator:
                 )
             import jax
 
-            if len(jax.devices()) >= fg.plan.num_gpus:
+            # collocate onto the SURVIVING devices (positional over the
+            # sorted healthy set): after a low-index failure the carving
+            # must not place work on the dead device, and the eviction
+            # semantics (entries touching a dead device are dropped) only
+            # hold if the dead device is actually excluded from new meshes
+            devs = jax.devices()
+            survivors = [devs[i] for i in sorted(self.healthy)
+                         if i < len(devs)]
+            if len(survivors) >= fg.plan.num_gpus:
                 col = Collocator(fg.plan, mcfg or MultiplexConfig(),
                                  monitor=self.monitor, tenants=tenants,
+                                 devices=survivors,
                                  cache=self.exec_cache,
                                  interference=self.interference)
+                rejected: tuple = ()
+                if admission_bound is not None and col.tenants:
+                    # the measured run re-derives per-stage QoS state from
+                    # wall-clock measurement; the admission sweep must
+                    # predict against that same reset state, not stale bans
+                    # the run is about to discard
+                    col.reset_measured_qos()
+                    decision = self.last_admission = col.admit(
+                        max_fg_slowdown=admission_bound
+                    )
+                    if decision.rejected:
+                        rejected = tuple(t.job for t in decision.rejected)
+                        self.events.append(ClusterEvent(
+                            time.time(), "admission", decision.row()
+                        ))
+                    if decision.n_admitted == 0:
+                        # nothing admitted: return the fg-only prediction —
+                        # no tenant is ever compiled (iterations == 0 marks
+                        # it predicted, so calibrate() ignores it)
+                        res = col.predict(0)
+                        res.rejected_tenants = rejected
+                        return res
+                    if decision.rejected:
+                        col = Collocator(fg.plan, self._last_mcfg,
+                                         monitor=self.monitor,
+                                         tenants=decision.admitted,
+                                         devices=survivors,
+                                         cache=self.exec_cache,
+                                         interference=self.interference)
                 res = col.run_executable(
                     make_fg_stage_fn, make_bg_step_fn, iterations=iterations
                 )
+                res.rejected_tenants = rejected
                 self.collocation_results.append(res)
                 if calibrate:
                     self.interference = col.calibrate(self.collocation_results)
@@ -218,7 +324,7 @@ class ClusterCoordinator:
             self.events.append(ClusterEvent(
                 time.time(), "fallback",
                 f"executable collocation wants {fg.plan.num_gpus} devices, "
-                f"process has {len(jax.devices())} -> MultiplexSim",
+                f"process has {len(survivors)} healthy -> MultiplexSim",
             ))
         return self.simulate_collocation(mcfg)
 

@@ -48,14 +48,43 @@ background jobs packed into one foreground job's gaps):
   ``CollocationResult``s, and ``Collocator.predict()`` replays the tenant
   schedule through the calibrated model so ``MultiplexSim`` / planning-time
   what-ifs track the hardware the executable path actually measured.
+
+Admission-controlled fair sharing (this layer decides *who runs* before
+anything compiles):
+
+- Per-tenant quanta: ``BgTenant.quantum`` aligns that tenant's gap chunks to
+  its own submesh width (``pack_ranges`` per-tenant mode) and each tenant's
+  bg step-time quantum is sized to the smallest gap *it* occupies rather
+  than the global gap minimum — a tenant holding only wide gaps runs bigger
+  (more efficient) steps.
+- Weighted fair sharing with a starvation guard: within an equal-priority
+  group, chunk ownership rotates across iterations and a per-tenant deficit
+  counter (``BgTenant.weight``-scaled fair share minus actual launches)
+  promotes starved tenants to the front of the next assignment, so no
+  tenant's measured throughput stays at zero while peers run.  Reported per
+  tenant via ``TenantResult.deficit``.
+- ``ExecutableCache`` is a bounded LRU (``max_entries``) with explicit
+  eviction of stale device subsets (``evict_stale``) — repeated
+  ``handle_failure``/``handle_join`` re-plan cycles no longer hold dead
+  jitted state alive.
+- Per-stage calibration: ``InterferenceModel.gap_inflation`` generalizes to
+  a per-gap-op vector (``gap_inflation_stages``) fitted by
+  ``Collocator.calibrate`` from per-stage measurements
+  (``CollocationResult.stage_slowdowns``), applied by both
+  ``MultiplexSim.run`` and ``Collocator.predict``.
+- Admission control: ``Collocator.admit`` sweeps candidate tenant counts
+  through the calibrated ``predict()`` and admits the
+  argmax-cluster-throughput roster *before compiling anything*, rejecting
+  tenants that would push fg slowdown past the paper's 1.33x QoS bound
+  (``ClusterCoordinator.collocate`` runs this by default).
 """
 from __future__ import annotations
 
 import math
 import time as _time
-from collections import defaultdict
+from collections import OrderedDict, defaultdict
 from dataclasses import dataclass, field, replace as _dc_replace
-from typing import Callable, Dict, List, Optional, Sequence, Tuple
+from typing import Callable, Dict, Iterable, List, Optional, Sequence, Tuple
 
 from repro.core.plan import BurstPlan, GapWindow, pack_ranges
 
@@ -115,6 +144,14 @@ class InterferenceModel:
     stage's gap (host-side dispatch contention, shared interconnect).  It is
     1.0 by default (ideal disjointness) and is *fitted from measurement* by
     ``Collocator.calibrate`` so simulator predictions track the hardware.
+
+    ``gap_inflation_stages`` refines the scalar into a per-gap-op vector:
+    ``(stage_index, multiplier)`` pairs fitted from per-stage measurements
+    (``CollocationResult.stage_slowdowns``).  ``gap_inflation_for(si)``
+    returns the stage's fitted multiplier, falling back to the scalar for
+    stages without a per-stage fit.  Every fitted multiplier is clamped to
+    >= 1.0 — a noisy host can measure a sub-1.0 slowdown, but interference
+    never *speeds up* the foreground.
     """
 
     naive_inflation: float = 1.9
@@ -123,6 +160,15 @@ class InterferenceModel:
     sensitive_inflation: float = 2.1
     sensitive_kinds: tuple = ("sync", "allreduce")
     gap_inflation: float = 1.0  # submesh mode; calibrated from measurement
+    gap_inflation_stages: Tuple[Tuple[int, float], ...] = ()  # per-stage fit
+
+    def gap_inflation_for(self, stage_index: int) -> float:
+        """Submesh-mode fg multiplier for one gap stage (per-stage fit when
+        available, else the scalar ``gap_inflation``)."""
+        for si, v in self.gap_inflation_stages:
+            if si == stage_index:
+                return v
+        return self.gap_inflation
 
     def fg_multiplier(self, *, priorities: bool, pacing: bool, sensitive: bool,
                       banned: bool) -> float:
@@ -245,7 +291,7 @@ class MultiplexSim:
                     if (not cfg.collocate_same_device
                             and (not cfg.use_feedback
                                  or self.monitor.collocation_allowed(op))):
-                        stage_time = window * self.imodel.gap_inflation
+                        stage_time = window * self.imodel.gap_inflation_for(si)
                     n_per_dev = math.floor(window / bg_t)
                     if cfg.use_pacing:
                         # paced: bounded outstanding work; residual overrun is
@@ -309,12 +355,21 @@ class BgTenant:
     for untagged factories, to the factory object itself — never to the job
     name alone, so two *different* factories submitted under one name can't
     silently share a compiled executable.
+
+    ``weight`` scales the tenant's fair share among equal-priority peers
+    (deficit-rotation fair sharing); ``quantum`` is the tenant's own device
+    chunk alignment (its submesh model width) — when set, each of the
+    tenant's gap chunks is a multiple of it instead of the scheduler's
+    global ``bg_model``, and the tenant's bg step-time quantum is sized to
+    its own chunks rather than the global gap minimum.
     """
 
     job: str
     priority: int = 0
     step_fn_factory: Optional[Callable] = None
     signature: Optional[object] = None  # any hashable executable identity
+    weight: float = 1.0                 # fair share among equal priorities
+    quantum: Optional[int] = None       # per-tenant chunk alignment
 
     @property
     def cache_signature(self):
@@ -329,7 +384,7 @@ class BgTenant:
 
 @dataclass
 class ExecutableCache:
-    """Compiled bg-step reuse across re-plans.
+    """Compiled bg-step reuse across re-plans — a bounded LRU.
 
     Keyed on (tenant signature, gap submesh device ids, submesh shape): a
     jitted step closes over device-committed state, so identity of the
@@ -338,11 +393,23 @@ class ExecutableCache:
     unchanged, the same key recurs and the jitted step (with its training
     state) is reused instead of re-jitted — re-compilation is the dominant
     cost of burst re-scaling.
+
+    Two bounds keep the cache from holding dead jitted state alive across
+    repeated re-plans:
+
+    - ``max_entries`` caps the entry count; inserting beyond it evicts the
+      least-recently-used entry (lookups refresh recency).
+    - ``evict_stale(live_device_ids)`` drops every entry whose submesh uses
+      a device outside the live set — after a device failure the jitted
+      steps (and their device-committed training state) on that subset are
+      dead and must be rebuilt even if the same gap shape later returns.
     """
 
-    entries: Dict[tuple, Callable] = field(default_factory=dict)
+    max_entries: int = 64
+    entries: "OrderedDict[tuple, Callable]" = field(default_factory=OrderedDict)
     hits: int = 0
     misses: int = 0
+    evictions: int = 0
 
     @staticmethod
     def key(signature: str, mesh) -> tuple:
@@ -352,19 +419,42 @@ class ExecutableCache:
             tuple(mesh.devices.shape),
         )
 
+    def __len__(self) -> int:
+        return len(self.entries)
+
     def get_or_build(self, key: tuple, build: Callable[[], Callable]) -> Callable:
         fn = self.entries.get(key)
         if fn is not None:
             self.hits += 1
+            self.entries.move_to_end(key)
             return fn
         self.misses += 1
         fn = self.entries[key] = build()
+        while len(self.entries) > self.max_entries:
+            self.entries.popitem(last=False)  # LRU out
+            self.evictions += 1
         return fn
+
+    def evict_stale(self, live_device_ids: Iterable[int]) -> int:
+        """Drop entries whose submesh touches a device outside ``live``
+        (explicit post-re-plan eviction of stale device subsets).  Returns
+        the number of entries evicted."""
+        live = set(live_device_ids)
+        stale = [k for k in self.entries if not set(k[1]) <= live]
+        for k in stale:
+            del self.entries[k]
+        self.evictions += len(stale)
+        return len(stale)
 
 
 @dataclass(frozen=True)
 class TenantResult:
-    """Per-tenant slice of a CollocationResult."""
+    """Per-tenant slice of a CollocationResult.
+
+    ``weight``/``deficit`` report the fair-sharing state: ``deficit`` is the
+    tenant's accumulated weighted fair share minus its actual launches — a
+    persistently positive deficit means the starvation guard is owed steps
+    and will promote this tenant in upcoming chunk assignments."""
 
     job: str
     priority: int
@@ -372,6 +462,10 @@ class TenantResult:
     bg_throughput: float  # steps per second of collocated fg wall time
     gap_stages: Tuple[int, ...] = ()  # stages where this tenant held devices
     devices: int = 0                  # largest submesh the tenant held
+    weight: float = 1.0
+    deficit: float = 0.0              # fair-share owed at end of run
+    quantum: int = 1                  # chunk alignment the tenant packed with
+    step_time: float = 0.0            # the tenant's bg step-time quantum
 
     def row(self) -> str:
         return (f"{self.job}(p{self.priority}): "
@@ -401,6 +495,35 @@ class CollocationResult:
     tenants: Tuple[TenantResult, ...] = ()  # per-tenant accounting
     cache_hits: int = 0    # executable-cache hits while building this run
     cache_misses: int = 0
+    # measured per-gap-stage fg slowdown (stage_index, min_col/baseline) for
+    # collocated stages — the raw material of per-stage calibration
+    stage_slowdowns: Tuple[Tuple[int, float], ...] = ()
+    # (fg + bg useful device-seconds) / (iteration wall x cluster size), in
+    # plan-time units — the admission controller's objective
+    cluster_throughput: float = 0.0
+    # tenants the admission controller refused to compile (job names)
+    rejected_tenants: Tuple[str, ...] = ()
+
+    def jain_fairness(self) -> float:
+        """Jain's fairness index over per-tenant weighted *service time*
+        (1.0 = perfectly fair; 1/n = one tenant has everything).  Service is
+        steps x the tenant's own step-time quantum — tenants deliberately
+        run different step sizes, so raw step counts are incomparable
+        across quanta (same rationale as the deficit accounting in
+        ``note_launched``).  Tenants with zero weight are excluded; rows
+        without a recorded step time (hand-built results) count steps
+        directly; no tenants -> 1.0."""
+        xs = [
+            t.bg_steps_per_iter
+            * (t.step_time if t.step_time > 0 else 1.0) / t.weight
+            for t in self.tenants if t.weight > 0
+        ]
+        if not xs:
+            return 1.0
+        denom = len(xs) * sum(x * x for x in xs)
+        if denom <= 0.0:
+            return 1.0
+        return sum(xs) ** 2 / denom
 
     def row(self) -> str:
         per_tenant = ""
@@ -412,6 +535,29 @@ class CollocationResult:
             f"bg_steps/s={self.bg_throughput:.1f} "
             f"banned={list(self.banned_ops) or 'none'}" + per_tenant
         )
+
+
+@dataclass(frozen=True)
+class AdmissionDecision:
+    """Outcome of the predict-before-compile admission sweep.
+
+    ``curve`` holds one (k, predicted fg slowdown, predicted cluster
+    throughput) triple per candidate tenant count 0..n; ``n_admitted`` is
+    the argmax-cluster-throughput k among those whose predicted fg slowdown
+    stays within ``bound``.  ``rejected`` tenants are never compiled.
+    """
+
+    bound: float
+    n_admitted: int
+    admitted: Tuple[BgTenant, ...]
+    rejected: Tuple[BgTenant, ...]
+    curve: Tuple[Tuple[int, float, float], ...]
+
+    def row(self) -> str:
+        pts = " ".join(f"k={k}:{s:.3f}x/{c:.3f}" for k, s, c in self.curve)
+        rej = ",".join(t.job for t in self.rejected) or "none"
+        return (f"admitted {self.n_admitted}/{self.n_admitted + len(self.rejected)} "
+                f"(bound {self.bound:.2f}x, rejected: {rej}) curve: {pts}")
 
 
 @dataclass
@@ -454,6 +600,14 @@ class Collocator:
         self._sim = MultiplexSim(self.plan, self.cfg, self.interference,
                                  monitor=self.monitor)
         self.bg_step_quantum = self._sim.bg_step_time()
+        # fair-sharing state: per-roster-slot deficit counters (in service
+        # seconds) and the rotation round (advanced by note_launched after
+        # each collocated iteration) — see _fair_assignment
+        self._deficits: Dict[int, float] = defaultdict(float)
+        self._round = 0
+        # last per-slot step-time quanta (set by _schedule_detail): converts
+        # launched step counts into service time for the deficit accounting
+        self._last_step_t: List[float] = []
 
     def schedule(self) -> List[Tuple[int, int]]:
         """(stage_index, n_bg_steps) pairs for one iteration (single-tenant
@@ -471,53 +625,240 @@ class Collocator:
                 out.append((gap.stage_index, n))
         return out
 
-    def schedule_tenants(
-        self, n_tenants: Optional[int] = None, bg_model: int = 1
-    ) -> List[Tuple[int, int, int]]:
-        """(stage_index, tenant_slot, n_bg_steps) triples for one iteration.
+    def reset_measured_qos(self) -> None:
+        """Drop this plan's per-stage QoS state (baselines/EMAs/bans) from
+        the monitor.  The monitor may hold *simulated* times (a shared
+        coordinator monitor fed by MultiplexSim) — a different time domain
+        than wall-clock measurement — so ``run_executable`` re-derives QoS
+        state from measurement, and the admission sweep must predict
+        against the same reset state or it would admit a roster for a
+        schedule (banned gaps excluded) the measured run then abandons."""
+        for si in range(len(self.plan.stages())):
+            op = f"stage{si}"
+            self.monitor.baseline.pop(op, None)
+            self.monitor.ema.pop(op, None)
+            self.monitor.banned.discard(op)
 
-        Mirrors the executable packing exactly: each gap's per-stage free
-        device ranges (branch windows excluded per-stage) are carved into up
-        to ``n_tenants`` disjoint ``bg_model``-aligned chunks
-        (``pack_ranges``), largest chunk to slot 0 (highest priority).
-        Every packed tenant paces ``min(floor(gap/bg_t), max_inflight)``
-        steps on its own disjoint devices; a feedback-banned gap admits no
-        tenant at all.
+    # -- fair-share scheduling ---------------------------------------------
+
+    def _roster_for(self, n: int) -> List[BgTenant]:
+        """The first ``n`` tenants, padded with placeholder slots for
+        admission-control what-ifs beyond the current roster."""
+        roster = list(self.tenants[:n])
+        while len(roster) < n:
+            roster.append(BgTenant(f"bg{len(roster)}"))
+        return roster
+
+    @staticmethod
+    def _roster_quanta(roster: Sequence[BgTenant],
+                       bg_model: int) -> List[int]:
+        """Effective per-slot chunk quanta: each tenant's own ``quantum``,
+        falling back to the scheduler-wide ``bg_model``.  The single source
+        for scheduling, submesh carving and executable prebuild — they must
+        agree or chunks and compiled meshes diverge."""
+        return [t.quantum or bg_model for t in roster]
+
+    @staticmethod
+    def _priority_groups(roster: Sequence[BgTenant]) -> List[Tuple[int, int]]:
+        """[start, end) slot spans of equal-priority runs (roster is
+        priority-sorted, so equal priorities are contiguous)."""
+        groups: List[Tuple[int, int]] = []
+        i = 0
+        while i < len(roster):
+            j = i
+            while j < len(roster) and roster[j].priority == roster[i].priority:
+                j += 1
+            groups.append((i, j))
+            i = j
+        return groups
+
+    def _fair_assignment(self, roster: Sequence[BgTenant], iteration: int,
+                         quanta: Sequence[int]) -> List[int]:
+        """chunk position -> roster slot permutation for one iteration.
+
+        Chunk positions are priority-ordered (position 0 = largest chunk).
+        Within each equal-priority, equal-quantum subgroup the owning slot
+        is chosen by (largest deficit first, then round-robin rotation by
+        ``iteration``), so a tenant the packing starved accumulates deficit
+        and is promoted to the front — the starvation guard: over k
+        iterations every member of a k-tenant subgroup owns the subgroup's
+        best chunk at least once.  Rotation stays within equal quanta so
+        every rotated tenant's quantum tiles the chunk carved for the
+        canonical owner (mixed-quanta peers keep canonical ownership — a
+        ROADMAP follow-on).  Singleton subgroups keep the identity
+        assignment.
+        """
+        perm = list(range(len(roster)))
+        for i, j in self._priority_groups(roster):
+            if j - i <= 1:
+                continue
+            subgroups: Dict[int, List[int]] = defaultdict(list)
+            for s in range(i, j):
+                subgroups[quanta[s]].append(s)
+            for members in subgroups.values():
+                k = len(members)
+                if k <= 1:
+                    continue
+                order = sorted(
+                    members,
+                    key=lambda s: (-self._deficits[s],
+                                   (members.index(s) - iteration) % k),
+                )
+                for pos, slot in zip(members, order):
+                    perm[pos] = slot
+        return perm
+
+    def _slot_step_times(self, n: int,
+                         gap_chunks: Dict[int, list]) -> List[float]:
+        """Per-slot bg step-time quantum: each tenant's step is sized to the
+        smallest gap *it* occupies in the canonical layout, not the global
+        gap minimum — a tenant holding only wide gaps runs bigger steps."""
+        cfg = self.cfg
+        if not cfg.use_granularity:
+            return [cfg.bg_step_time] * n
+        stages = self.plan.stages()
+        out = [self.bg_step_quantum] * n
+        for slot in range(n):
+            durs = [stages[si].duration for si, chunks in gap_chunks.items()
+                    if slot < len(chunks) and chunks[slot] is not None]
+            if durs:
+                t = min(cfg.bg_step_time,
+                        max(cfg.bg_min_step_time, min(durs) / 2.0))
+                out[slot] = max(t, cfg.bg_min_step_time)
+        return out
+
+    def _schedule_detail(
+        self, n_tenants: Optional[int] = None, bg_model: int = 1,
+        iteration: Optional[int] = None,
+        roster: Optional[Sequence[BgTenant]] = None,
+    ) -> List[Tuple[int, int, int, Tuple[int, int], int, float]]:
+        """Full per-iteration packing: (stage_index, tenant_slot, chunk_pos,
+        (start, end), n_bg_steps, bg_step_time) rows.
+
+        Each unbanned gap's per-stage free ranges are carved into per-tenant
+        chunks (``pack_ranges`` per-tenant mode, slot *i*'s chunk aligned to
+        tenant *i*'s quantum); the canonical owner of chunk position *i* is
+        slot *i*, then ``_fair_assignment`` rotates ownership within
+        equal-priority, equal-quantum subgroups (so every rotated tenant's
+        quantum tiles its chunk by construction, and the executable path's
+        pre-compiled (position, tenant) combinations are exactly the
+        schedulable ones).  Steps pace at
+        ``min(floor(gap / slot_step_time), max_inflight)`` per tenant.
         """
         n = n_tenants if n_tenants is not None else max(1, len(self.tenants))
-        bg_t = self.bg_step_quantum
-        out: List[Tuple[int, int, int]] = []
+        if n <= 0:
+            return []
+        roster = list(roster) if roster is not None else self._roster_for(n)
+        quanta = self._roster_quanta(roster, bg_model)
+        it = self._round if iteration is None else iteration
+        gap_chunks: Dict[int, list] = {}
         for gap in self.plan.gaps():
             op = f"stage{gap.stage_index}"
             if self.cfg.use_feedback and not self.monitor.collocation_allowed(op):
                 continue
-            nsteps = math.floor(gap.duration / bg_t)
-            if self.cfg.use_pacing:
-                nsteps = min(nsteps, self.cfg.max_inflight)
-            if nsteps <= 0:
-                continue
             chunks = pack_ranges(
                 self.plan.free_device_ranges(gap.stage_index), n,
-                quantum=bg_model,
+                quantum=quanta,
             )
-            for slot in range(len(chunks)):
-                out.append((gap.stage_index, slot, nsteps))
-        return out
+            if any(c is not None for c in chunks):
+                gap_chunks[gap.stage_index] = chunks
+        step_t = self._slot_step_times(n, gap_chunks)
+        self._last_step_t = step_t
+        perm = self._fair_assignment(roster, it, quanta)
+        stages = self.plan.stages()
+        rows: List[Tuple[int, int, int, Tuple[int, int], int, float]] = []
+        for si in sorted(gap_chunks):
+            chunks = gap_chunks[si]
+            dur = stages[si].duration
+            assign = {pos: perm[pos] for pos, c in enumerate(chunks)
+                      if c is not None}
+            for pos in sorted(assign):
+                slot = assign[pos]
+                nsteps = math.floor(dur / step_t[slot])
+                if nsteps <= 0 and slot != pos:
+                    # a rotated-in tenant whose (canonically-sized) step is
+                    # too big for this gap would leave the chunk idle — hand
+                    # it back to the canonical owner rather than waste it
+                    slot = pos
+                    nsteps = math.floor(dur / step_t[slot])
+                if self.cfg.use_pacing:
+                    nsteps = min(nsteps, self.cfg.max_inflight)
+                if nsteps > 0:
+                    rows.append((si, slot, pos, chunks[pos], nsteps,
+                                 step_t[slot]))
+        return rows
+
+    def schedule_tenants(
+        self, n_tenants: Optional[int] = None, bg_model: int = 1,
+        iteration: Optional[int] = None,
+    ) -> List[Tuple[int, int, int]]:
+        """(stage_index, tenant_slot, n_bg_steps) triples for one iteration.
+
+        Mirrors the executable packing exactly — see ``_schedule_detail``
+        for the per-tenant quantum / fair-rotation semantics.  ``iteration``
+        selects the rotation round (default: the collocator's internal
+        round, advanced by ``note_launched``)."""
+        return [(si, slot, n) for si, slot, _pos, _c, n, _t in
+                self._schedule_detail(n_tenants, bg_model, iteration)]
+
+    def note_launched(self, launched_by: Sequence[int],
+                      roster: Optional[Sequence[BgTenant]] = None) -> None:
+        """Record one collocated iteration's per-slot launches: updates the
+        fair-share deficit counters (weighted fair share minus actual, floor
+        0) and advances the rotation round.  Called by ``run_executable``
+        after every collocated iteration; scheduling-only callers drive it
+        directly to exercise the starvation guard.
+
+        Accounting is in *service time* (launched steps x the slot's
+        step-time quantum), not raw step counts: tenants deliberately run
+        different step sizes (per-tenant quanta), so counting steps would
+        let a big-step tenant's deficit grow without bound — it can never
+        match a small-step peer's count — freezing the rotation with that
+        tenant pinned to the best chunk forever."""
+        roster = list(roster) if roster is not None else list(self.tenants)
+        step_t = self._last_step_t
+
+        def service(s: int) -> float:
+            got = launched_by[s] if s < len(launched_by) else 0
+            t = step_t[s] if s < len(step_t) else self.bg_step_quantum
+            return got * t
+
+        for i, j in self._priority_groups(roster):
+            if j - i <= 1:
+                continue
+            total = sum(service(s) for s in range(i, j))
+            wsum = sum(max(roster[s].weight, 0.0) for s in range(i, j))
+            if wsum <= 0.0:
+                continue
+            for s in range(i, j):
+                fair = total * max(roster[s].weight, 0.0) / wsum
+                self._deficits[s] = max(
+                    0.0, self._deficits[s] + fair - service(s)
+                )
+        self._round += 1
 
     # -- executable submesh path -------------------------------------------
 
     def submeshes(self, *, fg_model: int = 1, bg_model: int = 1,
-                  tenants: Optional[int] = None):
+                  tenants: Optional[int] = None,
+                  tenant_quanta: Optional[Sequence[int]] = None):
         """Disjoint fg/bg submeshes for this plan (PlanSubmeshes).
 
         ``tenants`` (default: this collocator's tenant count) splits each
-        gap's free ranges into that many per-tenant submeshes."""
+        gap's free ranges into that many per-tenant submeshes.
+        ``tenant_quanta`` (default: the roster's per-tenant quanta, when any
+        tenant sets one) switches to the slot-aware per-tenant carving.
+        What-if counts beyond the roster pad with placeholder slots exactly
+        like the scheduler (quantum = ``bg_model``), so the carved chunks
+        always match what ``schedule_tenants(n)`` packs."""
         from repro.launch.mesh import split_mesh_for_plan
 
         n = tenants if tenants is not None else max(1, len(self.tenants))
+        if tenant_quanta is None and any(t.quantum for t in self.tenants[:n]):
+            tenant_quanta = self._roster_quanta(self._roster_for(n), bg_model)
         return split_mesh_for_plan(self.plan, devices=self.devices,
                                    fg_model=fg_model, bg_model=bg_model,
-                                   tenants=n)
+                                   tenants=n, tenant_quanta=tenant_quanta)
 
     # -- calibration + analytic prediction ---------------------------------
 
@@ -525,15 +866,27 @@ class Collocator:
         """Fit the interference model's submesh-mode multipliers from
         measured ``CollocationResult``s.
 
-        The measured foreground slowdown is attributed to the collocated gap
-        stages of the current tenant schedule: with collocated gap time
-        ``W_gap`` out of total iteration time ``W``, a measured (geometric
-        mean) slowdown ``s`` inverts to ``gap_inflation = 1 + (s-1)*W/W_gap``
-        — exactly the multiplier that makes ``predict()`` reproduce ``s``.
-        ``MultiplexSim.run`` applies the same multiplier to unbanned gap
-        stages, so its submesh path tracks ``s`` too, up to its own overrun
-        modeling and any gap stage that has free devices but admits no
-        tenant chunk (branch-covered free ranges).  Installs the fitted
+        Scalar fit (always): the measured foreground slowdown is attributed
+        to the collocated gap stages of the current tenant schedule — with
+        collocated gap time ``W_gap`` out of total iteration time ``W``, a
+        measured (geometric mean) slowdown ``s`` inverts to
+        ``gap_inflation = 1 + (s-1)*W/W_gap`` — exactly the multiplier that
+        makes ``predict()`` reproduce ``s``.
+
+        Per-stage fit (when results carry ``stage_slowdowns``): each
+        measured gap stage's multiplier is the geometric mean of its
+        per-stage slowdowns, then the vector's excess over 1.0 is rescaled
+        so the duration-weighted aggregate still reproduces ``s`` exactly —
+        per-stage *shape* from the stage measurements, the closed-form
+        aggregate inversion preserved.  Collocated stages without a
+        per-stage measurement keep the scalar multiplier, and the vector is
+        rescaled to the *residual* excess only, so partial stage coverage
+        never double-counts the measured slowdown.
+
+        Every fitted multiplier (scalar and per-stage) is clamped to >= 1.0:
+        on a noisy host a measured slowdown below 1.0 would otherwise fit a
+        sub-1.0 multiplier and make ``predict()``/``MultiplexSim`` forecast
+        that interference *speeds up* the foreground.  Installs the fitted
         model on this collocator's sim and returns it.
         """
         meas = [max(float(r.fg_slowdown), 1.0) for r in results
@@ -550,7 +903,47 @@ class Collocator:
             gi = 1.0
         else:
             gi = 1.0 + (s - 1.0) * total / gap_t
-        model = _dc_replace(self.interference, gap_inflation=max(gi, 1.0))
+        # per-stage fit: geomean of measured per-stage slowdowns, clamped,
+        # then rescaled so the aggregate inversion stays exact.  Ingestion
+        # keeps only stages the CURRENT schedule collocates: indices from an
+        # earlier, differently-shaped plan would attribute slowdowns to the
+        # wrong stages, and a stage the feedback loop has since banned never
+        # inflates in predict() — folding its measurement into the rescale
+        # denominator would dilute alpha and under-reproduce ``s``
+        per_stage: Dict[int, List[float]] = defaultdict(list)
+        for r in results:
+            if r.iterations > 0:
+                for si, v in r.stage_slowdowns:
+                    if si in col_stages:
+                        per_stage[si].append(max(float(v), 1.0))
+        stage_vec: Tuple[Tuple[int, float], ...] = ()
+        gi = max(gi, 1.0)
+        if per_stage:
+            fitted = {
+                si: math.exp(sum(math.log(v) for v in vals) / len(vals))
+                for si, vals in per_stage.items()
+            }
+            excess = sum(stages[si].duration * (fitted[si] - 1.0)
+                         for si in fitted)
+            # collocated stages WITHOUT a per-stage measurement keep the
+            # scalar multiplier at predict() time, so the fitted vector must
+            # explain only the residual excess — otherwise the aggregate is
+            # double-counted and admission over-rejects
+            unfitted_excess = sum(
+                stages[si].duration * (gi - 1.0)
+                for si in col_stages if si not in fitted
+            )
+            want = max(0.0, (s - 1.0) * total - unfitted_excess)
+            if excess > 0.0 and want > 0.0:
+                alpha = want / excess
+                stage_vec = tuple(sorted(
+                    (si, max(1.0, 1.0 + (fitted[si] - 1.0) * alpha))
+                    for si in fitted
+                ))
+            # excess == 0 (stage noise hid all inflation) -> no per-stage
+            # shape to keep; fall back to the scalar inversion alone
+        model = _dc_replace(self.interference, gap_inflation=gi,
+                            gap_inflation_stages=stage_vec)
         self.interference = model
         self._sim.imodel = model
         return model
@@ -560,39 +953,56 @@ class Collocator:
         """Analytic (device-free) prediction of ``run_executable`` under the
         current (possibly calibrated) interference model and monitor state.
 
-        Replays ``schedule_tenants`` through ``gap_inflation``: collocated
-        gap stages inflate by the calibrated multiplier, every packed tenant
-        contributes its paced step count.  ``iterations == 0`` marks the
-        result as predicted, not measured.
+        Replays the tenant schedule through the calibrated multipliers:
+        every collocated gap stage inflates by its per-stage
+        ``gap_inflation_for`` (the fitted vector where available, the scalar
+        elsewhere), every packed tenant contributes its paced step count,
+        and ``cluster_throughput`` — the admission objective — is
+        (fg busy + bg busy) device-seconds over the inflated iteration,
+        with bg busy estimated from each tenant's own step-time quantum and
+        chunk width.  ``n_tenants=0`` is the fg-only operating point.
+        ``iterations == 0`` marks the result as predicted, not measured.
         """
         n = n_tenants if n_tenants is not None else max(1, len(self.tenants))
-        sched = self.schedule_tenants(n, bg_model)
+        n = max(0, n)
+        detail = self._schedule_detail(n, bg_model) if n > 0 else []
         stages = self.plan.stages()
         fg_iso = self.plan.total_time
-        gi = self.interference.gap_inflation
-        col_stages = {si for si, _, _ in sched}
+        col_stages = {si for si, _, _, _, _, _ in detail}
         fg_col = fg_iso + sum(
-            stages[si].duration * (gi - 1.0) for si in col_stages
+            stages[si].duration * (self.interference.gap_inflation_for(si) - 1.0)
+            for si in col_stages
         )
         per_slot: Dict[int, int] = defaultdict(int)
         slot_stages: Dict[int, List[int]] = defaultdict(list)
-        for si, slot, nsteps in sched:
+        slot_devices: Dict[int, int] = defaultdict(int)
+        slot_step_t: Dict[int, float] = {}
+        bg_busy = 0.0
+        for si, slot, _pos, (cs, ce), nsteps, bg_t in detail:
             per_slot[slot] += nsteps
             slot_stages[slot].append(si)
+            slot_devices[slot] = max(slot_devices[slot], ce - cs)
+            slot_step_t[slot] = bg_t
+            bg_busy += nsteps * bg_t * (ce - cs)
         total_steps = float(sum(per_slot.values()))
+        fg_busy = sum(s.duration * s.gpus for s in stages)
+        cluster = (fg_busy + bg_busy) / max(fg_col * self.plan.num_gpus, 1e-30)
         # every scheduled slot gets a row — hypothetical tenant counts
         # (admission-control what-ifs beyond the current roster) show up as
         # placeholder tenants, so the per-tenant rows always sum to the
         # aggregate
-        roster = list(self.tenants[:n])
-        while len(roster) < n:
-            roster.append(BgTenant(f"bg{len(roster)}"))
+        roster = self._roster_for(n)
         rows = tuple(
             TenantResult(
                 job=t.job, priority=t.priority,
                 bg_steps_per_iter=float(per_slot.get(slot, 0)),
                 bg_throughput=per_slot.get(slot, 0) / max(fg_col, 1e-30),
                 gap_stages=tuple(sorted(slot_stages.get(slot, ()))),
+                devices=slot_devices.get(slot, 0),
+                weight=t.weight,
+                deficit=self._deficits[slot],
+                quantum=t.quantum or bg_model,
+                step_time=slot_step_t.get(slot, 0.0),
             )
             for slot, t in enumerate(roster)
         )
@@ -605,6 +1015,38 @@ class Collocator:
             iterations=0,
             banned_ops=tuple(sorted(self.monitor.banned)),
             tenants=rows,
+            cluster_throughput=cluster,
+        )
+
+    def admit(self, *, max_fg_slowdown: float = 1.33, bg_model: int = 1,
+              max_tenants: Optional[int] = None) -> AdmissionDecision:
+        """Predict-before-compile admission control (paper §5 operating-point
+        selection): sweep candidate tenant counts 0..n through the
+        calibrated ``predict()`` and admit the roster prefix whose predicted
+        cluster throughput is highest among those keeping fg slowdown within
+        ``max_fg_slowdown`` (the paper's 1.33x QoS bound).  Predicted
+        throughput ties go to the *larger* roster — serving one more tenant
+        at no predicted cluster cost is strictly better for fairness.  k=0
+        (fg only, slowdown 1.0) is always feasible, so the decision never
+        admits a roster the model says breaks the bound.  Nothing is
+        compiled here — rejected tenants never reach the executable cache.
+        """
+        n_max = len(self.tenants) if max_tenants is None else max_tenants
+        curve: List[Tuple[int, float, float]] = []
+        best_k, best_c = 0, float("-inf")
+        for k in range(n_max + 1):
+            pred = self.predict(k, bg_model)
+            curve.append((k, pred.fg_slowdown, pred.cluster_throughput))
+            if (pred.fg_slowdown <= max_fg_slowdown + 1e-12
+                    and pred.cluster_throughput >= best_c - 1e-9):
+                best_k = k
+                best_c = max(best_c, pred.cluster_throughput)
+        return AdmissionDecision(
+            bound=max_fg_slowdown,
+            n_admitted=best_k,
+            admitted=tuple(self.tenants[:best_k]),
+            rejected=tuple(self.tenants[best_k:]),
+            curve=tuple(curve),
         )
 
     def run_executable(
@@ -663,18 +1105,16 @@ class Collocator:
                 raise ValueError(f"tenant {t.job!r} has no step_fn_factory")
 
         devs = list(self.devices) if self.devices is not None else jax.devices()
-        # The monitor may hold *simulated* times (a shared coordinator
-        # monitor fed by MultiplexSim) — a different time domain than the
-        # wall-clock measurements below.  Re-derive QoS state for this
-        # plan's ops from measurement so stale baselines can't poison the
-        # slowdown feedback.
-        for si in range(len(self.plan.stages())):
-            op = f"stage{si}"
-            self.monitor.baseline.pop(op, None)
-            self.monitor.ema.pop(op, None)
-            self.monitor.banned.discard(op)
+        # re-derive QoS state for this plan's ops from measurement so stale
+        # (possibly simulated-domain) baselines can't poison the feedback
+        self.reset_measured_qos()
+        n_slots = len(roster)
+        quanta = self._roster_quanta(roster, bg_model)
+        # always pass the roster's quanta explicitly: submeshes() must carve
+        # exactly the chunks _schedule_detail packs for THIS roster, even
+        # when it differs from self.tenants (an override roster)
         split = self.submeshes(fg_model=fg_model, bg_model=bg_model,
-                               tenants=len(roster))
+                               tenants=n_slots, tenant_quanta=quanta)
         stages = self.plan.stages()
         mesh_cache: Dict[Tuple[int, int], object] = {
             split.fg_range: split.fg_mesh
@@ -689,27 +1129,53 @@ class Collocator:
                 )
             fg_fns.append(make_fg_stage_fn(st, mesh_cache[rng]))
 
-        # per-(stage, tenant-slot) bg step fns, built through the executable
-        # cache so an unchanged gap submesh reuses the jitted step
+        # per-(stage, chunk position, tenant-slot) bg step fns, built through
+        # the executable cache so an unchanged gap submesh reuses the jitted
+        # step.  Only the canonical owner of each position (slot i on chunk
+        # i) pre-compiles; a fair-rotated (position, peer) combination jits
+        # lazily on first dispatch — a k-member equal-priority group costs k
+        # compiles up front plus one per combination the rotation actually
+        # reaches, never k^2 executables (and k^2 device-resident state
+        # replicas) for assignments that may never occur.  A lazy compile
+        # lands inside one measured iteration; the min-over-iterations
+        # steady state discards that sample.
         hits0 = self.cache.hits if self.cache else 0
         miss0 = self.cache.misses if self.cache else 0
-        bg_fns: Dict[Tuple[int, int], Callable] = {}
+        bg_fns: Dict[Tuple[int, int, int], Callable] = {}
+        chunk_mesh: Dict[Tuple[int, int], object] = {}
         slot_devices: Dict[int, int] = defaultdict(int)
+        lazy_builds: List[Tuple[int, int, int]] = []
+
+        def build_bg_fn(si: int, pos: int, slot: int) -> Optional[Callable]:
+            fn = bg_fns.get((si, pos, slot))
+            if fn is not None:
+                return fn
+            mesh = chunk_mesh.get((si, pos))
+            if mesh is None or slot >= len(roster):
+                return None
+            tnt = roster[slot]
+
+            def build(t=tnt, m=mesh, combo=(si, pos, slot)):
+                # only a REAL build marks the iteration as a compile
+                # warm-up — a warm-cache hit costs nothing and must not
+                # make run_iter discard the iteration's QoS measurements
+                lazy_builds.append(combo)
+                return t.step_fn_factory(m)
+
+            if self.cache is not None:
+                key = ExecutableCache.key(tnt.cache_signature, mesh)
+                fn = self.cache.get_or_build(key, build)
+            else:
+                fn = build()
+            bg_fns[(si, pos, slot)] = fn
+            return fn
+
         for si, slots in split.bg_tenants.items():
-            for slot, (rng, mesh) in enumerate(slots):
-                if slot >= len(roster):
-                    break
-                tnt = roster[slot]
-                if self.cache is not None:
-                    key = ExecutableCache.key(tnt.cache_signature, mesh)
-                    fn = self.cache.get_or_build(
-                        key, lambda t=tnt, m=mesh: t.step_fn_factory(m)
-                    )
-                else:
-                    fn = tnt.step_fn_factory(mesh)
-                bg_fns[(si, slot)] = fn
-                slot_devices[slot] = max(slot_devices[slot], rng[1] - rng[0])
-        n_slots = len(roster)
+            for pos, entry in enumerate(slots):
+                if pos >= n_slots or entry is None:
+                    continue
+                chunk_mesh[(si, pos)] = entry[1]
+                build_bg_fn(si, pos, pos)  # canonical owner pre-compiles
 
         # compile warmup outside the timed region (cache hits re-warm too:
         # one step is cheap and keeps first-iteration timing honest)
@@ -719,11 +1185,14 @@ class Collocator:
             _block(bf())
 
         def run_iter(collocate: bool):
-            sched = (
-                {(si, slot): n
-                 for si, slot, n in self.schedule_tenants(n_slots, bg_model)}
-                if collocate else {}
+            rows = (
+                self._schedule_detail(n_slots, bg_model,
+                                      iteration=self._round, roster=roster)
+                if collocate else []
             )
+            by_stage: Dict[int, List[Tuple[int, int, int]]] = defaultdict(list)
+            for si, slot, pos, _c, n, _t in rows:
+                by_stage[si].append((slot, pos, n))
             # per-tenant pacing: each tenant's submesh is a disjoint device
             # set, so the in-flight bound (non-preemptive tail control)
             # applies per tenant, not across them
@@ -731,12 +1200,15 @@ class Collocator:
                 s: [] for s in range(n_slots)
             }
             launched_by = [0] * n_slots
+            stage_dts = [0.0] * len(fg_fns)
+            builds_before = len(lazy_builds)
             t_start = time_fn()
             for si, fn in enumerate(fg_fns):
                 op = f"stage{si}"
-                for slot in range(n_slots):  # priority order
-                    bf = bg_fns.get((si, slot))
-                    n_bg = sched.get((si, slot), 0) if bf is not None else 0
+                for slot, pos, n_bg in sorted(by_stage.get(si, ())):
+                    bf = build_bg_fn(si, pos, slot)  # lazy for rotated combos
+                    if bf is None:
+                        continue
                     q = inflight[slot]
                     for _ in range(n_bg):
                         while len(q) >= self.cfg.max_inflight:
@@ -752,12 +1224,19 @@ class Collocator:
                 t0 = time_fn()
                 _block(fn())
                 dt = time_fn() - t0
+                stage_dts[si] = dt
+                compiled = len(lazy_builds) > builds_before
                 if not collocate:
                     prev = self.monitor.baseline.get(op)
                     self.monitor.record_baseline(
                         op, dt if prev is None else min(prev, dt)
                     )
-                else:
+                elif not compiled:
+                    # an iteration that lazily jitted a rotated combo is a
+                    # warm-up sample: its stage times include compile +
+                    # state-replica setup, which must not feed the slowdown
+                    # feedback (it would ban every collocated stage and shut
+                    # collocation off for the rest of the run)
                     self.monitor.record(op, dt, collocated=bool(outstanding))
                     # non-preemptive bg tails harm *later* stages, not the
                     # gap they were launched into — attribute the overrun to
@@ -771,24 +1250,49 @@ class Collocator:
             for q in inflight.values():
                 for _, f in q:
                     _block(f)
-            return time_fn() - t_start, launched_by, sched
+            if collocate:
+                # fair sharing: book per-slot launches into the deficit
+                # counters and advance the rotation round
+                self.note_launched(launched_by, roster)
+            return (time_fn() - t_start, launched_by, rows, stage_dts,
+                    len(lazy_builds) > builds_before)
 
         iso = [run_iter(False)[0] for _ in range(max(1, iterations))]
         fg_iso = min(iso)
         col: List[Tuple[float, int]] = []
         col_by_tenant: List[List[int]] = []
+        col_bg_busy: List[float] = []
+        slot_stages_ran: Dict[int, set] = defaultdict(set)
+        col_stage_min: Dict[int, float] = {}
 
         def col_iter() -> None:
-            t, launched_by, sched = run_iter(True)
+            t, launched_by, rows, stage_dts, compiled = run_iter(True)
             col.append((t, sum(launched_by)))
             col_by_tenant.append(launched_by)
+            # bg device-seconds and per-tenant device footprint come from
+            # the rows actually dispatched this iteration (not from every
+            # chunk a rotation *candidate* could have held)
+            col_bg_busy.append(sum(
+                n * bg_t * (ce - cs) for _si, _sl, _p, (cs, ce), n, bg_t in rows
+            ))
+            for si, slot, _pos, (cs, ce), _n, _t in rows:
+                slot_stages_ran[slot].add(si)
+                slot_devices[slot] = max(slot_devices[slot], ce - cs)
+                if not compiled:
+                    col_stage_min[si] = min(
+                        col_stage_min.get(si, float("inf")), stage_dts[si]
+                    )
             # iteration-level watchdog: per-op feedback only bans ops whose
             # own slowdown crosses the threshold, but many sub-threshold
             # inflations can still break the iteration bound — ban every
-            # origin that collocated in an over-bound iteration
-            if (self.cfg.use_feedback and sched
+            # origin that collocated in an over-bound iteration.  Warm-up
+            # iterations (a rotated combo jitted lazily mid-iteration) are
+            # exempt: their time is compile + state setup, not interference
+            if (self.cfg.use_feedback and rows and not compiled
                     and t > self.monitor.slowdown_threshold * fg_iso):
-                self.monitor.banned.update(f"stage{s}" for s, _ in sched)
+                self.monitor.banned.update(
+                    f"stage{s}" for s, _, _, _, _, _ in rows
+                )
 
         for _ in range(max(1, iterations)):
             col_iter()
@@ -814,6 +1318,24 @@ class Collocator:
         fg_iso = max(fg_iso, min(iso_post))
         fg_col = min(t for t, _ in col)
         bg_steps = sum(n for _, n in col) / len(col)
+        # per-gap-stage measured slowdown: collocated per-stage min against
+        # the isolated per-stage baseline (per-stage calibration input).
+        # Raw ratios — calibrate() clamps to >= 1.0 when fitting.
+        stage_slowdowns = tuple(
+            (si, col_stage_min[si] / self.monitor.baseline[f"stage{si}"])
+            for si in sorted(col_stage_min)
+            if self.monitor.baseline.get(f"stage{si}", 0.0) > 0.0
+        )
+        # measured cluster throughput in plan-time units: planned fg busy
+        # over the slowdown-inflated iteration, plus the bg device-seconds
+        # of the rows actually dispatched (per-row step-time quantum x its
+        # own chunk width, averaged over the collocated iterations)
+        slowdown = fg_col / max(fg_iso, 1e-30)
+        fg_busy = sum(s.duration * s.gpus for s in stages)
+        bg_busy = sum(col_bg_busy) / len(col_bg_busy)
+        cluster = (fg_busy + bg_busy) / max(
+            self.plan.total_time * slowdown * self.plan.num_gpus, 1e-30
+        )
         tenant_rows = tuple(
             TenantResult(
                 job=t.job, priority=t.priority,
@@ -824,17 +1346,21 @@ class Collocator:
                     sum(row[slot] for row in col_by_tenant)
                     / len(col_by_tenant) / max(fg_col, 1e-30)
                 ),
-                gap_stages=tuple(sorted(
-                    si for (si, s2) in bg_fns if s2 == slot
-                )),
+                gap_stages=tuple(sorted(slot_stages_ran.get(slot, ()))),
                 devices=slot_devices.get(slot, 0),
+                weight=t.weight,
+                deficit=self._deficits[slot],
+                quantum=quanta[slot],
+                step_time=(self._last_step_t[slot]
+                           if slot < len(self._last_step_t)
+                           else self.bg_step_quantum),
             )
             for slot, t in enumerate(roster)
         )
         return CollocationResult(
             fg_iter_time=fg_col,
             fg_iter_time_isolated=fg_iso,
-            fg_slowdown=fg_col / max(fg_iso, 1e-30),
+            fg_slowdown=slowdown,
             bg_steps_per_iter=bg_steps,
             bg_throughput=bg_steps / max(fg_col, 1e-30),
             iterations=len(col),
@@ -843,6 +1369,8 @@ class Collocator:
             tenants=tenant_rows,
             cache_hits=(self.cache.hits - hits0) if self.cache else 0,
             cache_misses=(self.cache.misses - miss0) if self.cache else 0,
+            stage_slowdowns=stage_slowdowns,
+            cluster_throughput=cluster,
         )
 
     def run_iteration(self, fg_stage_fns: List[Callable], bg_step_fn: Callable,

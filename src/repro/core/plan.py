@@ -7,6 +7,7 @@ executor applies sharding re-maps and the multiplexer finds gaps.
 """
 from __future__ import annotations
 
+import math
 from dataclasses import dataclass, field
 from functools import cached_property
 from typing import Dict, List, Optional, Tuple
@@ -117,36 +118,99 @@ def complement_ranges(busy, total: int) -> List[Tuple[int, int]]:
     return free
 
 
-def pack_ranges(free, n: int, quantum: int = 1) -> List[Tuple[int, int]]:
+def normalize_quanta(quanta, n: int) -> List[int]:
+    """Per-tenant quantum vector, normalized: ints clamped >= 1, truncated
+    to ``n`` entries and padded with the last value (1 when empty).  Shared
+    by ``pack_ranges`` and the submesh carving so the two can never diverge
+    on the padding rule."""
+    q = [max(1, int(v)) for v in quanta][:n]
+    q += [q[-1] if q else 1] * (n - len(q))
+    return q
+
+
+def pack_ranges(free, n: int, quantum=1):
     """Carve up to ``n`` disjoint chunks out of free [start, end) ranges for
     priority-ordered tenants.
 
-    Every chunk size is a multiple of ``quantum`` (the tenant submesh's model
-    width), chunks never overlap and each lies inside one input range.  The
-    result is sorted largest-first (ties: lower start), so chunk *i* goes to
-    the *i*-th highest-priority tenant.  While there are fewer chunks than
-    tenants, the largest chunk is split in half (quantum-aligned) — two
-    tenants share one big gap rather than one tenant hoarding it.
+    ``quantum`` is either a single int (every chunk size a multiple of it —
+    the tenant submesh's model width) or a *per-tenant sequence* of ints
+    (slot-aware mode: each tenant sizes its chunk to its own quantum).
+
+    Scalar mode (back-compat): chunks never overlap, each lies inside one
+    input range, and the result is a dense largest-first list (ties: lower
+    start) of at most ``n`` chunks, so chunk *i* goes to the *i*-th
+    highest-priority tenant.  While there are fewer chunks than tenants, the
+    largest chunk is split in half (quantum-aligned) — two tenants share one
+    big gap rather than one tenant hoarding it.
+
+    Per-tenant mode: the result has exactly ``n`` entries where entry *i* is
+    slot *i*'s chunk — size a multiple of ``quantum[i]`` — or ``None`` when
+    the remaining free devices cannot satisfy that tenant's quantum.
+    Candidate chunks are carved (and halved toward ``n`` shares) at gcd
+    alignment, then slots claim greedily in priority order: slot *i* takes
+    the ``quantum[i]``-aligned prefix of the candidate with the largest such
+    prefix (ties: lower start), returning the unclaimed remainder to the
+    pool; when no single candidate fits, adjacent unclaimed fragments of
+    the same free range re-coalesce — a wide-quantum (high-priority) tenant
+    is never starved by the sharing split when the unsplit range would have
+    satisfied it.  A sequence shorter than ``n`` is padded with its last
+    value.
     """
     if n <= 0:
         return []
+    per_tenant = not isinstance(quantum, int)
+    if per_tenant:
+        quanta = normalize_quanta(quantum, n)
+        base = math.gcd(*quanta)
+    else:
+        quanta = [quantum] * n
+        base = quantum
     chunks: List[Tuple[int, int]] = []
     for s, e in merge_ranges(free):
-        m = (e - s) - (e - s) % quantum
+        m = (e - s) - (e - s) % base
         if m > 0:
             chunks.append((s, s + m))
     if not chunks:
-        return []
+        return [None] * n if per_tenant else []
     key = lambda r: (-(r[1] - r[0]), r[0])
     chunks.sort(key=key)
     while len(chunks) < n:
         s, e = chunks[0]
-        if e - s < 2 * quantum:  # largest can't split -> none can
+        if e - s < 2 * base:  # largest can't split -> none can
             break
-        half = ((e - s) // 2 // quantum) * quantum
+        half = ((e - s) // 2 // base) * base
         chunks[0:1] = [(s, s + half), (s + half, e)]
         chunks.sort(key=key)
-    return sorted(chunks[:n], key=key)
+    if not per_tenant:
+        return sorted(chunks[:n], key=key)
+    out: List[Optional[Tuple[int, int]]] = []
+    pool = list(chunks)
+    for q in quanta:
+        cand = [
+            (-((e - s) - (e - s) % q), s, i)
+            for i, (s, e) in enumerate(pool)
+            if (e - s) >= q
+        ]
+        if not cand:
+            # no single candidate fits: adjacent unclaimed fragments of one
+            # free range re-coalesce (the sharing split must not starve a
+            # wide-quantum tenant the unsplit range could satisfy)
+            pool = merge_ranges(pool)
+            cand = [
+                (-((e - s) - (e - s) % q), s, i)
+                for i, (s, e) in enumerate(pool)
+                if (e - s) >= q
+            ]
+        if not cand:
+            out.append(None)
+            continue
+        negsz, s, i = min(cand)  # largest aligned size, then lowest start
+        e = pool[i][1]
+        take = -negsz
+        # claim the aligned prefix; the remainder returns to the pool
+        pool[i:i + 1] = [(s + take, e)] if e > s + take else []
+        out.append((s, s + take))
+    return out
 
 
 @dataclass(frozen=True)

@@ -14,7 +14,7 @@ import jax
 import numpy as np
 from jax.sharding import Mesh
 
-from repro.core.plan import pack_ranges, pow2_floor
+from repro.core.plan import normalize_quanta, pack_ranges, pow2_floor
 
 
 def make_production_mesh(*, multi_pod: bool = False):
@@ -100,7 +100,7 @@ class PlanSubmeshes:
     fg_mesh: Mesh
     bg: Dict[int, Tuple[Tuple[int, int], Mesh]]
     stage_fg_range: Dict[int, Tuple[int, int]]
-    bg_tenants: Dict[int, Tuple[Tuple[Tuple[int, int], Mesh], ...]] = field(
+    bg_tenants: Dict[int, Tuple[Optional[Tuple[Tuple[int, int], Mesh]], ...]] = field(
         default_factory=dict
     )
 
@@ -110,12 +110,16 @@ class PlanSubmeshes:
 
     def tenant_mesh(self, stage_index: int, slot: int) -> Optional[Mesh]:
         slots = self.bg_tenants.get(stage_index, ())
-        return slots[slot][1] if slot < len(slots) else None
+        if slot >= len(slots) or slots[slot] is None:
+            return None
+        return slots[slot][1]
 
 
 def split_mesh_for_plan(plan, *, devices: Optional[Sequence] = None,
                         fg_model: int = 1, bg_model: int = 1,
-                        tenants: int = 1) -> PlanSubmeshes:
+                        tenants: int = 1,
+                        tenant_quanta: Optional[Sequence[int]] = None,
+                        ) -> PlanSubmeshes:
     """Carve the device set into the plan's fg submesh + per-gap bg submeshes.
 
     For each ``GapWindow`` the free set is ``plan.free_device_ranges(stage)``
@@ -124,6 +128,12 @@ def split_mesh_for_plan(plan, *, devices: Optional[Sequence] = None,
     ``tenants`` disjoint ``bg_model``-aligned chunks (``pack_ranges``,
     largest chunk first for the highest-priority tenant).  Raises when the
     process has fewer devices than the plan assumes.
+
+    ``tenant_quanta`` switches to the slot-aware per-tenant mode: slot *i*'s
+    chunk is aligned to (and its submesh model width is) ``tenant_quanta[i]``
+    instead of the global ``bg_model``; a slot whose quantum no chunk can
+    satisfy gets ``None`` in ``bg_tenants`` (the tenant is dropped from that
+    gap — admission control / the starvation rotation decide what to do).
     """
     devs = list(devices) if devices is not None else jax.devices()
     if len(devs) < plan.num_gpus:
@@ -136,20 +146,29 @@ def split_mesh_for_plan(plan, *, devices: Optional[Sequence] = None,
         fg_model = 1
     fg_mesh = submesh_from_range(0, fg_peak, model=fg_model, devices=devs)
     bg: Dict[int, Tuple[Tuple[int, int], Mesh]] = {}
-    bg_tenants: Dict[int, Tuple[Tuple[Tuple[int, int], Mesh], ...]] = {}
+    bg_tenants: Dict[int, Tuple[Optional[Tuple[Tuple[int, int], Mesh]], ...]] = {}
     stage_fg: Dict[int, Tuple[int, int]] = {
         i: (0, s.gpus) for i, s in enumerate(stages)
     }
+    quanta = (normalize_quanta(tenant_quanta, tenants)
+              if tenant_quanta is not None else None)
     for gap in plan.gaps():
         free = plan.free_device_ranges(gap.stage_index)
-        chunks = pack_ranges(free, tenants, quantum=bg_model)
-        if not chunks:
+        chunks = pack_ranges(free, tenants,
+                             quantum=quanta if quanta is not None else bg_model)
+        if not chunks or all(c is None for c in chunks):
             continue
         slots = tuple(
-            ((s, e), submesh_from_range(s, e, model=bg_model, devices=devs))
-            for s, e in chunks
+            None if c is None else (
+                c, submesh_from_range(
+                    c[0], c[1],
+                    model=quanta[slot] if quanta is not None else bg_model,
+                    devices=devs,
+                )
+            )
+            for slot, c in enumerate(chunks)
         )
         bg_tenants[gap.stage_index] = slots
-        bg[gap.stage_index] = slots[0]
+        bg[gap.stage_index] = next(s for s in slots if s is not None)
     return PlanSubmeshes(fg_range=(0, fg_peak), fg_mesh=fg_mesh, bg=bg,
                          stage_fg_range=stage_fg, bg_tenants=bg_tenants)

@@ -25,8 +25,13 @@ def _bg_submeshes(fg_devices: int, amp_limit: float, hw, cfg, n: int):
     ranges — clipped to clear the fg mesh's prefix [0, fg_devices) — are
     packed into up to ``n`` disjoint chunks (``pack_ranges``, largest chunk
     to the first --bg-arch).  Falls back to the raw spare devices when the
-    host plan leaves no usable gap.  Returns ``n`` entries; tenants beyond
-    the packable chunk count get None (plain same-device jit fallback).
+    host plan leaves no usable gap.
+
+    Returns (meshes, dropped): ``meshes`` has ``n`` entries where tenants
+    beyond the packable chunk count get None (plain same-device jit
+    fallback), and ``dropped`` lists those tenant indices explicitly — the
+    caller must surface them (log + CollocationResult.rejected_tenants),
+    never silently vanish a requested tenant.
     """
     import jax
 
@@ -38,7 +43,7 @@ def _bg_submeshes(fg_devices: int, amp_limit: float, hw, cfg, n: int):
 
     n_dev = len(jax.devices())
     if n_dev <= fg_devices:
-        return [None] * n
+        return [None] * n, list(range(n))
     host_plan = make_plan(build_lm_graph(cfg, TRAIN_4K), pow2_floor(n_dev),
                           amp_limit, hw)
     free = []
@@ -51,7 +56,8 @@ def _bg_submeshes(fg_devices: int, amp_limit: float, hw, cfg, n: int):
         free = [(fg_devices, n_dev)]
     chunks = pack_ranges(free, n)
     meshes = [submesh_from_range(lo, hi) for lo, hi in chunks]
-    return meshes + [None] * (n - len(meshes))
+    dropped = list(range(len(meshes), n))
+    return meshes + [None] * (n - len(meshes)), dropped
 
 
 def main():
@@ -96,8 +102,19 @@ def main():
     bg_fn = None
     if args.bg_arch:
         archs = list(args.bg_arch)
-        meshes = _bg_submeshes(args.data * args.model, args.amp_limit,
-                               coord.hw, cfg, len(archs))
+        meshes, dropped = _bg_submeshes(args.data * args.model,
+                                        args.amp_limit, coord.hw, cfg,
+                                        len(archs))
+        if dropped:
+            # a requested tenant must never vanish silently: say exactly
+            # which --bg-arch lost its gap submesh and what happens instead
+            print(
+                "WARNING: no gap submesh for bg tenant(s) "
+                + ", ".join(f"{i} ({archs[i]})" for i in dropped)
+                + f" — the plan's gaps packed only {len(archs) - len(dropped)}"
+                f" chunk(s); dropped tenants fall back to same-device jit "
+                f"(they share the fg devices instead of a disjoint submesh)"
+            )
         bg_fns = []
         for i, (bg_arch, bg_mesh) in enumerate(zip(archs, meshes)):
             # register the tenant with the coordinator (priority: CLI order,
@@ -108,14 +125,16 @@ def main():
             )
             if bg_mesh is not None:
                 # executable collocation: the bg step is jitted onto a gap
-                # submesh disjoint from the foreground training mesh
+                # submesh disjoint from the foreground training mesh; the
+                # step's global batch is sized to the tenant's own chunk
+                # width (per-device batch), not a one-size-fits-all quantum
                 from repro.train.step import bg_step_factory
 
-                bg_fns.append(bg_step_factory(bg_arch, batch=4, seq=32,
-                                              seed=1 + i)(bg_mesh))
+                bg_fns.append(bg_step_factory(bg_arch, seq=32, seed=1 + i,
+                                              per_device_batch=2)(bg_mesh))
                 ids = sorted(d.id for d in bg_mesh.devices.flat)
                 print(f"bg tenant {i} ({bg_arch}) on disjoint submesh "
-                      f"devices {ids}")
+                      f"devices {ids} (batch 2/device)")
             else:
                 from repro.models.api import get_model, make_batch
                 from repro.optim.optimizer import make_optimizer

@@ -87,7 +87,8 @@ def jit_train_step(api, optimizer, mesh, shape: ShapeConfig, donate: bool = True
 
 
 def bg_step_factory(arch: str = "qwen2-1.5b", *, batch: int = 4, seq: int = 8,
-                    seed: int = 0, on_loss: Optional[Callable] = None):
+                    seed: int = 0, on_loss: Optional[Callable] = None,
+                    per_device_batch: Optional[int] = None):
     """``make_bg_step_fn`` for executable gap collocation
     (``Collocator.run_executable``): returns a callable that, given a gap
     submesh, jits a REAL tiny-LM training step onto it with a private state
@@ -95,11 +96,20 @@ def bg_step_factory(arch: str = "qwen2-1.5b", *, batch: int = 4, seq: int = 8,
     step's (device-resident) loss.  Shared by bench_collocation,
     multiplex_demo and the training entrypoint's --bg-arch path.
 
+    ``per_device_batch`` sizes the tenant's step to its own chunk width
+    (the per-tenant bg step quantum): each jitted step uses
+    ``per_device_batch * mesh.devices.size`` samples, so a tenant holding a
+    wide gap chunk trains a proportionally bigger global batch instead of
+    everyone running the batch sized for the global gap minimum.  Without
+    it, ``batch`` is the fixed global batch (legacy behavior).
+
     The returned factory carries a ``signature`` attribute
-    (``"{arch}-b{batch}-s{seq}-r{seed}"``) identifying the compiled
-    executable for ``ExecutableCache`` reuse across re-plans: two tenants
-    built from factories with equal signatures and landing on the same gap
-    submesh share one jitted step.
+    (``"{arch}-b{batch}-s{seq}-r{seed}"``, or ``-pdb{n}-`` in
+    per-device-batch mode) identifying the compiled executable for
+    ``ExecutableCache`` reuse across re-plans: two tenants built from
+    factories with equal signatures and landing on the same gap submesh
+    share one jitted step.  (The cache key also carries the submesh device
+    ids/shape, so per-device sizing never aliases across chunk widths.)
     """
     import dataclasses
 
@@ -111,11 +121,14 @@ def bg_step_factory(arch: str = "qwen2-1.5b", *, batch: int = 4, seq: int = 8,
     cfg = get_config(arch).reduced()
     api = get_model(cfg)
     opt = make_optimizer(cfg)
-    shape = dataclasses.replace(TRAIN_4K, seq_len=seq, global_batch=batch,
-                                name="bg")
-    raw = make_batch(jax.random.PRNGKey(seed + 1), cfg, batch, seq)
 
     def make_bg_step_fn(mesh):
+        b_global = batch
+        if per_device_batch is not None:
+            b_global = max(1, per_device_batch * int(mesh.devices.size))
+        shape = dataclasses.replace(TRAIN_4K, seq_len=seq,
+                                    global_batch=b_global, name="bg")
+        raw = make_batch(jax.random.PRNGKey(seed + 1), cfg, b_global, seq)
         fn, st_sh, bt_sh = jit_train_step(api, opt, mesh, shape, donate=False)
         holder = {
             "state": jax.device_put(
@@ -132,7 +145,10 @@ def bg_step_factory(arch: str = "qwen2-1.5b", *, batch: int = 4, seq: int = 8,
 
         return step
 
-    make_bg_step_fn.signature = f"{arch}-b{batch}-s{seq}-r{seed}"
+    if per_device_batch is not None:
+        make_bg_step_fn.signature = f"{arch}-pdb{per_device_batch}-s{seq}-r{seed}"
+    else:
+        make_bg_step_fn.signature = f"{arch}-b{batch}-s{seq}-r{seed}"
     return make_bg_step_fn
 
 

@@ -15,6 +15,7 @@ from repro.core.multiplex import (
     MultiplexConfig,
     MultiplexSim,
     QoSMonitor,
+    TenantResult,
 )
 from repro.core.planner import plan
 from repro.models.graph import build_vgg_graph
@@ -171,6 +172,175 @@ def test_schedule_tenants_never_exceeds_free_devices(vgg_plan):
             assert slot < len(chunks)  # a slot only exists if it got devices
 
 
+def test_schedule_tenants_per_tenant_quanta(vgg_plan):
+    """Tenants with their own quantum get chunks aligned to it, and their
+    step-time quantum is sized to the gaps THEY occupy, not the global
+    minimum."""
+    tenants = [
+        BgTenant("wide", 2, lambda m: (lambda: None), quantum=2),
+        BgTenant("narrow", 1, lambda m: (lambda: None)),
+    ]
+    col = Collocator(vgg_plan, MultiplexConfig(max_inflight=4),
+                     tenants=tenants)
+    detail = col._schedule_detail()
+    assert detail
+    for si, slot, pos, (cs, ce), nsteps, bg_t in detail:
+        q = tenants[slot].quantum or 1
+        assert (ce - cs) % q == 0  # chunk aligned to ITS tenant's quantum
+        assert nsteps <= 4
+    # a tenant occupying only a subset of gaps sizes its step to that
+    # subset's smallest gap, not the min over ALL gaps: feed a canonical
+    # layout where slot 0 holds only the longest gap and slot 1 nothing
+    gaps = sorted(vgg_plan.gaps(), key=lambda g: -g.duration)
+    big = gaps[0]
+    times = col._slot_step_times(2, {big.stage_index: [(0, 2), None]})
+    global_t = col.bg_step_quantum
+    expect = min(col.cfg.bg_step_time,
+                 max(col.cfg.bg_min_step_time, big.duration / 2.0))
+    assert times[0] == pytest.approx(expect)
+    assert times[0] >= global_t  # its only gap is the biggest one
+    assert times[1] == global_t  # slot with no gaps keeps the global quantum
+
+
+def test_submeshes_whatif_padding_matches_scheduler(vgg_plan):
+    """Regression: a what-if tenant count beyond the roster pads submesh
+    carving quanta with placeholder slots (quantum = bg_model), exactly as
+    the scheduler does — NOT with the last real tenant's quantum."""
+    import jax
+
+    if len(jax.devices()) < vgg_plan.num_gpus:
+        pytest.skip("needs 8 devices (tier1-multidevice job)")
+    col = Collocator(vgg_plan, MultiplexConfig(max_inflight=2),
+                     tenants=[BgTenant("a", 1, lambda m: (lambda: None),
+                                       quantum=2)])
+    split = col.submeshes(tenants=2)
+    sched_rows = col._schedule_detail(2)
+    chunks_by_stage = {}
+    for si, _slot, pos, chunk, _n, _t in sched_rows:
+        chunks_by_stage.setdefault(si, {})[pos] = chunk
+    for si, slots in split.bg_tenants.items():
+        for pos, entry in enumerate(slots):
+            want = chunks_by_stage.get(si, {}).get(pos)
+            if entry is None:
+                continue
+            # every carved chunk the scheduler also packs must agree exactly
+            if want is not None:
+                assert entry[0] == want, (si, pos, entry[0], want)
+
+
+def test_equal_priority_rotation_and_deficit(vgg_plan):
+    """Equal-priority tenants rotate chunk ownership across iterations; a
+    deficit promotes the starved tenant to the largest chunk."""
+    tenants = [BgTenant(f"t{i}", 1, lambda m: (lambda: None))
+               for i in range(2)]
+    col = Collocator(vgg_plan, MultiplexConfig(max_inflight=2),
+                     tenants=tenants)
+    d0 = col._schedule_detail(iteration=0)
+    d1 = col._schedule_detail(iteration=1)
+    pos_of = lambda d, slot: {(si, pos) for si, s, pos, _, _, _ in d
+                              if s == slot}
+    # rotation: slot 0 owns position 0 at iteration 0, position 1 at 1
+    assert pos_of(d0, 0) == pos_of(d1, 1)
+    assert pos_of(d0, 1) == pos_of(d1, 0)
+    # distinct priorities never rotate
+    fixed = Collocator(vgg_plan, MultiplexConfig(max_inflight=2),
+                       tenants=_tenants(2))
+    assert fixed._schedule_detail(iteration=0) == \
+        fixed._schedule_detail(iteration=7)
+    # deficit dominates rotation: starve slot 1, it takes position 0
+    col._deficits[1] = 100.0
+    d = col._schedule_detail(iteration=0)
+    assert all(slot == 1 for _, slot, pos, _, _, _ in d if pos == 0)
+    # note_launched books the weighted fair share and advances the round
+    r0 = col._round
+    col.note_launched([4, 0])
+    assert col._round == r0 + 1
+    assert col._deficits[1] > 100.0  # starved again -> deficit grew
+    assert col._deficits[0] == 0.0   # overserved -> floored at zero
+
+
+def test_rotation_zero_step_falls_back_to_canonical_owner():
+    """A rotated-in tenant whose (canonically-sized) step is too big for a
+    short gap must hand the chunk back to the canonical owner instead of
+    leaving the gap idle for that iteration."""
+    from repro.core.plan import BurstPlan, LayerPlan
+
+    mk = lambda i, g, t: LayerPlan(index=i, name=f"l{i}", gpus=g, time=t,
+                                   comp=t, sync=0.0, comm_in=0.0, amp=1.0)
+    # wide 40ms gap (4 free -> 2 chunks); narrow 1.5ms gap (1 free -> 1
+    # chunk).  Slot 1 canonically holds only the wide gap, so its step
+    # quantum is bg_step_time (2ms) > the narrow gap's duration.
+    p = BurstPlan(
+        layers=(mk(0, 8, 1e-3), mk(1, 4, 40e-3), mk(2, 8, 1e-3),
+                mk(3, 7, 1.5e-3)),
+        num_gpus=8, amp_limit=2.0, single_gpu_time=43.5e-3,
+    )
+    narrow_si = 3
+    tenants = [BgTenant(f"t{i}", 1, lambda m: (lambda: None))
+               for i in range(2)]
+    col = Collocator(p, MultiplexConfig(max_inflight=2, use_feedback=False),
+                     tenants=tenants)
+    assert col._slot_step_times(2, {1: [(4, 6), (6, 8)], 3: [(7, 8), None]})
+    for it in range(6):
+        rows = [r for r in col._schedule_detail(iteration=it)
+                if r[0] == narrow_si]
+        # the narrow gap never idles, and only the canonical owner (whose
+        # step fits) ever runs there
+        assert rows, it
+        for _si, slot, pos, _c, n, _t in rows:
+            assert slot == 0 and n > 0, (it, rows)
+
+
+def test_note_launched_respects_weights(vgg_plan):
+    tenants = [BgTenant("heavy", 1, lambda m: (lambda: None), weight=3.0),
+               BgTenant("light", 1, lambda m: (lambda: None), weight=1.0)]
+    col = Collocator(vgg_plan, MultiplexConfig(), tenants=tenants)
+    col.note_launched([2, 2])  # equal split of 4 steps (same step quantum)
+    # total service 4q; fair shares 3q and q: heavy is owed q, light owes q
+    q = col.bg_step_quantum
+    assert col._deficits[0] == pytest.approx(q)
+    assert col._deficits[1] == 0.0
+
+
+def test_deficit_accounting_is_service_time_not_step_counts():
+    """Regression: tenants with different step-time quanta must book
+    service seconds, not raw step counts, into the deficit — otherwise a
+    big-step tenant can never match a small-step peer's count, its deficit
+    diverges, and the rotation freezes with it pinned to the best chunk."""
+    from repro.core.plan import BurstPlan, LayerPlan
+
+    mk = lambda i, g, t: LayerPlan(index=i, name=f"l{i}", gpus=g, time=t,
+                                   comp=t, sync=0.0, comm_in=0.0, amp=1.0)
+    # wide 40ms gap (4 free -> 2 chunks) + narrow 3ms gap (1 free -> 1
+    # chunk): slot 1 canonically holds only the wide gap, so its step
+    # quantum (2ms) is larger than slot 0's (1.5ms, set by the narrow gap)
+    p = BurstPlan(
+        layers=(mk(0, 8, 1e-3), mk(1, 4, 40e-3), mk(2, 8, 1e-3),
+                mk(3, 7, 3e-3)),
+        num_gpus=8, amp_limit=2.0, single_gpu_time=45e-3,
+    )
+    tenants = [BgTenant(f"t{i}", 1, lambda m: (lambda: None))
+               for i in range(2)]
+    col = Collocator(p, MultiplexConfig(max_inflight=2, use_feedback=False),
+                     tenants=tenants)
+    pos0_owner = []
+    for _ in range(30):
+        detail = col._schedule_detail()
+        launched = [0, 0]
+        for _si, slot, pos, _c, n, _t in detail:
+            launched[slot] += n
+            if pos == 0:
+                pos0_owner.append(slot)
+        col.note_launched(launched)
+    # deficits stay bounded (no monotonic divergence)...
+    per_iter_service = sum(
+        n * t for _si, _slot, _pos, _c, n, t in col._schedule_detail()
+    )
+    assert max(col._deficits.values()) < 2 * per_iter_service
+    # ...and best-chunk ownership keeps rotating to BOTH tenants
+    assert {0, 1} <= set(pos0_owner[-8:])
+
+
 def test_executable_cache_semantics():
     cache = ExecutableCache()
     built = []
@@ -190,6 +360,38 @@ def test_executable_cache_semantics():
     cache.get_or_build(("sigA", (2, 3), (2, 1)), build_a)
     cache.get_or_build(("sigB", (0, 1), (2, 1)), build_a)
     assert (cache.hits, cache.misses) == (1, 3)
+
+
+def test_executable_cache_lru_bound():
+    cache = ExecutableCache(max_entries=3)
+    for i in range(3):
+        cache.get_or_build((f"s{i}", (i,), (1,)), lambda i=i: (lambda: i))
+    assert len(cache) == 3 and cache.evictions == 0
+    # refresh s0 (recency), then insert a 4th: s1 is now the LRU victim
+    cache.get_or_build(("s0", (0,), (1,)), lambda: (lambda: None))
+    cache.get_or_build(("s3", (3,), (1,)), lambda: (lambda: None))
+    assert len(cache) == 3 and cache.evictions == 1
+    keys = set(cache.entries)
+    assert ("s1", (1,), (1,)) not in keys
+    assert ("s0", (0,), (1,)) in keys and ("s3", (3,), (1,)) in keys
+    # the evicted entry rebuilds on next use (miss, not a stale hit)
+    m0 = cache.misses
+    cache.get_or_build(("s1", (1,), (1,)), lambda: (lambda: None))
+    assert cache.misses == m0 + 1
+
+
+def test_executable_cache_evict_stale_device_subsets():
+    cache = ExecutableCache()
+    cache.get_or_build(("a", (0, 1), (2, 1)), lambda: (lambda: None))
+    cache.get_or_build(("b", (2, 3), (2, 1)), lambda: (lambda: None))
+    cache.get_or_build(("c", (1, 3), (2, 1)), lambda: (lambda: None))
+    # device 3 dies: every entry whose submesh touched it is dropped
+    n = cache.evict_stale({0, 1, 2})
+    assert n == 2 and cache.evictions == 2
+    assert list(cache.entries) == [("a", (0, 1), (2, 1))]
+    # idempotent; a fully-live set evicts nothing
+    assert cache.evict_stale({0, 1, 2}) == 0
+    assert cache.evict_stale({0, 1, 2, 3}) == 0
 
 
 def test_bg_tenant_cache_signature_fallbacks():
@@ -250,6 +452,208 @@ def test_calibrate_inverts_to_measured_slowdown(vgg_plan):
     assert col.calibrate([]) is m2
     # predictions without measurements are excluded
     assert col.calibrate([pred]) is m2
+
+
+def _measured_staged(slowdown, stage_slowdowns, steps=6.0):
+    return CollocationResult(
+        fg_iter_time=slowdown, fg_iter_time_isolated=1.0,
+        fg_slowdown=slowdown, bg_steps_per_iter=steps,
+        bg_throughput=steps / slowdown, iterations=3,
+        stage_slowdowns=tuple(stage_slowdowns),
+    )
+
+
+def test_calibrate_clamps_sub_unity_measurements(vgg_plan):
+    """Regression: on a noisy host a measured geomean slowdown s < 1 must
+    NOT fit a sub-1.0 multiplier — predict()/MultiplexSim would otherwise
+    forecast that interference *speeds up* the foreground."""
+    col = Collocator(vgg_plan, MultiplexConfig(max_inflight=2),
+                     tenants=_tenants(2))
+    model = col.calibrate([_measured(0.8), _measured(0.9)])
+    assert model.gap_inflation == 1.0
+    assert all(v >= 1.0 for _, v in model.gap_inflation_stages)
+    assert col.predict().fg_slowdown == pytest.approx(1.0)
+    sim = MultiplexSim(vgg_plan,
+                       MultiplexConfig(collocate_same_device=False),
+                       model).run(10)
+    assert sim.fg_slowdown >= 1.0 - 1e-9
+    # per-stage raw ratios below 1.0 clamp too
+    m2 = col.calibrate([_measured_staged(0.9, [(1, 0.7), (2, 0.95)])])
+    assert m2.gap_inflation == 1.0
+    assert all(v >= 1.0 for _, v in m2.gap_inflation_stages)
+
+
+def test_per_stage_calibration_fits_vector(vgg_plan):
+    col = Collocator(vgg_plan, MultiplexConfig(max_inflight=2),
+                     tenants=_tenants(2))
+    sched_stages = sorted({si for si, _, _ in col.schedule_tenants()})
+    assert len(sched_stages) >= 2
+    hot, cold = sched_stages[0], sched_stages[1]
+    model = col.calibrate([_measured_staged(
+        1.20, [(hot, 1.5), (cold, 1.01)]
+    )])
+    fitted = dict(model.gap_inflation_stages)
+    # per-stage shape: the hot stage carries more of the inflation
+    assert fitted[hot] > fitted[cold] >= 1.0
+    assert model.gap_inflation_for(hot) == fitted[hot]
+    # stages without a fit fall back to the scalar
+    unfitted = [si for si in range(len(vgg_plan.stages()))
+                if si not in fitted]
+    for si in unfitted:
+        assert model.gap_inflation_for(si) == model.gap_inflation
+    # the vector is rescaled so the aggregate inversion stays exact: the
+    # prediction reproduces the measured slowdown despite per-stage shape
+    pred = col.predict()
+    assert pred.fg_slowdown == pytest.approx(1.20, abs=1e-6)
+    # PARTIAL stage coverage must not double-count: unfitted collocated
+    # stages keep the scalar, the vector explains only the residual, and
+    # the aggregate still reproduces the measurement exactly
+    col2 = Collocator(vgg_plan, MultiplexConfig(max_inflight=2),
+                      tenants=_tenants(2))
+    m_partial = col2.calibrate([_measured_staged(1.20, [(hot, 1.5)])])
+    assert len(m_partial.gap_inflation_stages) == 1
+    assert col2.predict().fg_slowdown == pytest.approx(1.20, abs=1e-6)
+    # a measured stage the feedback loop has since BANNED is excluded from
+    # the fit (it never inflates in predict), and the aggregate inversion
+    # over the remaining collocated stages stays exact
+    col3 = Collocator(vgg_plan, MultiplexConfig(max_inflight=2),
+                      tenants=_tenants(2))
+    col3.monitor.record_baseline(f"stage{hot}", 1.0)
+    col3.monitor.record(f"stage{hot}", 10.0, collocated=True)
+    assert not col3.monitor.collocation_allowed(f"stage{hot}")
+    m_banned = col3.calibrate(
+        [_measured_staged(1.10, [(hot, 1.5), (cold, 1.2)])]
+    )
+    assert hot not in dict(m_banned.gap_inflation_stages)
+    assert col3.predict().fg_slowdown == pytest.approx(1.10, abs=1e-6)
+    # and the per-stage vector flows into the sim
+    cfg = MultiplexConfig(collocate_same_device=False)
+    flat = MultiplexSim(vgg_plan, cfg, InterferenceModel()).run(10)
+    staged = MultiplexSim(vgg_plan, cfg, model).run(10)
+    assert staged.fg_slowdown > flat.fg_slowdown
+
+
+# -- admission control --------------------------------------------------------
+
+
+def test_admit_rejects_over_bound(vgg_plan):
+    from repro.core.multiplex import InterferenceModel as IM
+
+    col = Collocator(vgg_plan, MultiplexConfig(max_inflight=2),
+                     tenants=_tenants(3),
+                     interference=IM(gap_inflation=2.0))
+    decision = col.admit(max_fg_slowdown=1.33)
+    # every k >= 1 collocates the same gap stages -> same predicted
+    # slowdown -> all infeasible: nothing is admitted
+    assert decision.n_admitted == 0
+    assert [t.job for t in decision.rejected] == [t.job for t in col.tenants]
+    assert decision.curve[0] == (0, 1.0, pytest.approx(
+        decision.curve[0][2]))
+    assert all(s > 1.33 for k, s, _ in decision.curve if k >= 1)
+    assert "rejected" in decision.row()
+
+
+def test_admit_uncalibrated_admits_all_and_prefers_larger_roster(vgg_plan):
+    col = Collocator(vgg_plan, MultiplexConfig(max_inflight=2),
+                     tenants=_tenants(3))
+    decision = col.admit()
+    # ideal disjointness (gap_inflation 1.0): every tenant is predicted
+    # harmless; cluster-throughput ties go to the larger roster
+    assert decision.n_admitted == 3 and not decision.rejected
+    assert len(decision.curve) == 4
+    ks = [k for k, _, _ in decision.curve]
+    assert ks == [0, 1, 2, 3]
+    # k=0 is the fg-only operating point: slowdown exactly 1.0 and strictly
+    # less cluster throughput than any packed roster
+    assert decision.curve[0][1] == 1.0
+    assert decision.curve[0][2] < decision.curve[1][2]
+
+
+def test_replan_drops_stale_stage_vector_keeps_scalar():
+    """Regression: a plan-changing re-plan must drop the fitted per-stage
+    inflation vector (keyed by OLD plan stage indices) but keep the scalar
+    (a host property) — otherwise admission applies old-plan multipliers to
+    the wrong stages of the new plan."""
+    from repro.configs.vgg16 import CONFIG as VCFG
+    from repro.core.coordinator import ClusterCoordinator, Job
+    from repro.models.graph import build_vgg_graph
+
+    coord = ClusterCoordinator(8)
+    coord.submit_foreground(
+        Job("fg", "foreground", build_vgg_graph(VCFG, 32), amp_limit=1.5)
+    )
+    coord.interference = InterferenceModel(
+        gap_inflation=1.2, gap_inflation_stages=((3, 1.4),)
+    )
+    # no-op re-plan (same plan): calibration state survives
+    coord.handle_join([])
+    assert coord.interference.gap_inflation_stages == ((3, 1.4),)
+    # real failure -> differently-shaped plan: stage vector dropped,
+    # scalar kept, stale measurements cleared
+    coord.collocation_results.append(_measured(1.2))
+    coord.handle_failure(7)
+    assert coord.interference.gap_inflation_stages == ()
+    assert coord.interference.gap_inflation == pytest.approx(1.2)
+    assert coord.collocation_results == []
+
+
+def test_predict_zero_tenants_is_fg_only(vgg_plan):
+    col = Collocator(vgg_plan, MultiplexConfig(), tenants=_tenants(2))
+    pred = col.predict(0)
+    assert pred.fg_slowdown == 1.0
+    assert pred.bg_steps_per_iter == 0.0 and pred.tenants == ()
+    assert 0.0 < pred.cluster_throughput <= 1.0 + 1e-9
+
+
+def test_predict_cluster_throughput_monotone_in_tenants(vgg_plan):
+    col = Collocator(vgg_plan, MultiplexConfig(max_inflight=2),
+                     tenants=_tenants(2))
+    c = [col.predict(k).cluster_throughput for k in (0, 1, 2)]
+    assert c[0] < c[1] <= c[2] + 1e-9
+    assert all(0.0 < x <= 1.0 + 1e-9 for x in c)
+
+
+def test_jain_fairness_index():
+    even = CollocationResult(
+        fg_iter_time=1.0, fg_iter_time_isolated=1.0, fg_slowdown=1.0,
+        bg_steps_per_iter=8.0, bg_throughput=8.0, iterations=1,
+        tenants=(
+            TenantResult("a", 1, 4.0, 4.0),
+            TenantResult("b", 1, 4.0, 4.0),
+        ),
+    )
+    skewed = CollocationResult(
+        fg_iter_time=1.0, fg_iter_time_isolated=1.0, fg_slowdown=1.0,
+        bg_steps_per_iter=8.0, bg_throughput=8.0, iterations=1,
+        tenants=(
+            TenantResult("a", 1, 8.0, 8.0),
+            TenantResult("b", 1, 0.0, 0.0),
+        ),
+    )
+    assert even.jain_fairness() == pytest.approx(1.0)
+    assert skewed.jain_fairness() == pytest.approx(0.5)
+    # weighted: a 3:1 split under 3:1 weights IS fair
+    weighted = CollocationResult(
+        fg_iter_time=1.0, fg_iter_time_isolated=1.0, fg_slowdown=1.0,
+        bg_steps_per_iter=8.0, bg_throughput=8.0, iterations=1,
+        tenants=(
+            TenantResult("a", 1, 6.0, 6.0, weight=3.0),
+            TenantResult("b", 1, 2.0, 2.0, weight=1.0),
+        ),
+    )
+    assert weighted.jain_fairness() == pytest.approx(1.0)
+    assert _measured(1.0).jain_fairness() == 1.0  # no tenants
+    # service-time units: a big-step tenant launching fewer steps for the
+    # same device-time is NOT unfair (same rationale as note_launched)
+    svc = CollocationResult(
+        fg_iter_time=1.0, fg_iter_time_isolated=1.0, fg_slowdown=1.0,
+        bg_steps_per_iter=10.0, bg_throughput=10.0, iterations=1,
+        tenants=(
+            TenantResult("big", 1, 2.0, 2.0, step_time=2e-3),
+            TenantResult("small", 1, 8.0, 8.0, step_time=0.5e-3),
+        ),
+    )
+    assert svc.jain_fairness() == pytest.approx(1.0)
 
 
 def test_calibrated_model_flows_into_sim(vgg_plan):

@@ -11,9 +11,12 @@ forced host device count, like tests/test_collocation.py):
 2. Executable-cache transparency: a cache-hit run must produce the same
    tenant schedule and per-tenant launched step counts as the cache-miss
    run that populated it (feedback off, so the schedule is deterministic).
-3. Re-plan reuse: a ``ClusterCoordinator`` re-plan with an unchanged gap
-   shape must hit the executable cache instead of rebuilding bg steps
-   (the acceptance criterion for executable reuse).
+3. Re-plan reuse + eviction: a ``ClusterCoordinator`` re-plan with an
+   unchanged gap shape must hit the executable cache instead of rebuilding
+   bg steps, a device *failure* must evict the jitted steps whose submesh
+   touched the dead device (their device-committed state is gone), and the
+   cache's entry count must stay bounded across repeated failure/join
+   re-plan cycles (the acceptance criterion for bounded executable reuse).
 """
 import os
 import subprocess
@@ -152,7 +155,8 @@ def test_replan_unchanged_gap_shape_hits_cache():
     )
     res1 = coord.collocate(cfg, executable=True, make_fg_stage_fn=make_fg)
     assert res1.iterations > 0 and res1.bg_steps_per_iter > 0
-    # both submitted background jobs actually co-ran in the gaps
+    # both submitted background jobs were admitted and actually co-ran
+    assert res1.rejected_tenants == ()
     assert len(res1.tenants) == 2
     assert all(t.bg_steps_per_iter > 0 for t in res1.tenants), res1.tenants
     assert res1.tenants[0].job == "bgA"  # priority order
@@ -160,24 +164,50 @@ def test_replan_unchanged_gap_shape_hits_cache():
     misses = coord.exec_cache.misses
 
     # elastic no-op re-plan: same healthy set -> identical plan -> identical
-    # gap submesh shapes -> compiled bg steps are reused, not rebuilt
+    # gap submesh shapes -> compiled bg steps are reused, not rebuilt (and
+    # nothing is evicted: every cached submesh is still on live devices)
     plan_before = coord.foreground().plan
     coord.handle_join([])
     assert coord.foreground().plan.layers == plan_before.layers
+    assert coord.exec_cache.evictions == 0
     res2 = coord.collocate(cfg, executable=True, make_fg_stage_fn=make_fg)
     assert coord.exec_cache.misses == misses, (coord.exec_cache.misses, misses)
     assert res2.cache_misses == 0 and res2.cache_hits >= res1.cache_misses
 
-    # a real failure changes the plan (8 -> 4 devices): new gap shapes may
-    # compile, but a join back to the original set hits the cache again
+    # a real failure kills device 7: every jitted step whose submesh touched
+    # it holds dead device-committed state and must be evicted (the PR-4
+    # cache held these alive forever); surviving subsets stay cached
+    entries_full = len(coord.exec_cache.entries)
     coord.handle_failure(7)
+    dead = jax.devices()[7].id
+    assert coord.exec_cache.evictions > 0
+    assert all(dead not in k[1] for k in coord.exec_cache.entries)
     coord.collocate(cfg, executable=True, make_fg_stage_fn=make_fg)
     misses_small = coord.exec_cache.misses
+
+    # join back to the original set: entries that never touched device 7
+    # are reused; the evicted ones recompile (their state died with the
+    # device) — the cache must NOT have held them alive
     coord.handle_join([7])
     assert coord.foreground().plan.layers == plan_before.layers
     res4 = coord.collocate(cfg, executable=True, make_fg_stage_fn=make_fg)
-    assert coord.exec_cache.misses == misses_small
-    assert res4.cache_misses == 0 and res4.cache_hits > 0
+    assert res4.cache_hits > 0  # surviving device subsets were reused
+    assert coord.exec_cache.misses >= misses_small
+
+    # bounded across repeated failure/join re-plan cycles: entry count and
+    # per-cycle compilations reach a fixed point instead of accumulating
+    sizes, cycle_misses = [], []
+    for _ in range(3):
+        coord.handle_failure(7)
+        coord.collocate(cfg, executable=True, make_fg_stage_fn=make_fg)
+        coord.handle_join([7])
+        m0 = coord.exec_cache.misses
+        coord.collocate(cfg, executable=True, make_fg_stage_fn=make_fg)
+        sizes.append(len(coord.exec_cache.entries))
+        cycle_misses.append(coord.exec_cache.misses - m0)
+    assert sizes[0] == sizes[1] == sizes[2], sizes  # no unbounded growth
+    assert len(coord.exec_cache.entries) <= coord.exec_cache.max_entries
+    assert cycle_misses[1] == cycle_misses[2], cycle_misses  # steady state
     print("OK", res1.bg_steps_per_iter, res4.bg_steps_per_iter)
     """)
     assert "OK" in out

@@ -8,9 +8,18 @@ Invariants:
   complement_ranges — tiles [0, total) exactly against the merged busy set.
   pack_ranges       — chunks are disjoint, quantum-aligned, inside the free
                       set, sorted largest-first, at most n of them.
+  pack_ranges (per-tenant quanta) — exactly n slot entries; slot i's chunk
+                      is a multiple of quantum[i] (None when unsatisfiable),
+                      chunks stay disjoint and inside the free set, and a
+                      uniform quantum vector degenerates to scalar mode.
   plan packing      — for random BurstPlans with random BranchPlacements,
                       tenant chunks never overlap the stage's fg devices or
-                      the branch windows active in that stage.
+                      the branch windows active in that stage (scalar and
+                      per-tenant modes alike).
+  fair rotation     — for equal-priority tenants scheduled over N
+                      iterations with deficit accounting, no tenant starves:
+                      every tenant runs at least floor(N / n_tenants) times
+                      whenever any peer runs (the starvation bound).
 """
 try:
     from hypothesis import given, settings, strategies as st
@@ -144,3 +153,119 @@ def test_tenant_packing_never_overlaps_fg_or_branches(plan, n, quantum):
         # fg + branches + free tile the machine exactly
         assert (sum(e - s for s, e in busy) + sum(e - s for s, e in free)
                 == plan.num_gpus)
+
+
+# -- per-tenant quantum vectors ----------------------------------------------
+
+
+quanta_lists = st.lists(st.integers(1, 4), min_size=1, max_size=5)
+
+
+@settings(max_examples=MAX_EXAMPLES, deadline=None)
+@given(range_lists, quanta_lists)
+def test_pack_ranges_per_tenant_quanta_invariants(free, quanta):
+    n = len(quanta)
+    chunks = pack_ranges(free, n, quantum=quanta)
+    # slot-aware mode: exactly one entry per tenant slot
+    assert len(chunks) == n
+    merged_free = merge_ranges(free)
+    taken = [c for c in chunks if c is not None]
+    for slot, c in enumerate(chunks):
+        if c is None:
+            continue
+        s, e = c
+        # each chunk aligned to ITS tenant's quantum, inside one free range
+        assert (e - s) > 0 and (e - s) % quanta[slot] == 0
+        assert any(fs <= s and e <= fe for fs, fe in merged_free)
+    # pairwise disjoint
+    ordered = sorted(taken)
+    for (s1, e1), (s2, e2) in zip(ordered, ordered[1:]):
+        assert e1 <= s2
+    # a None slot is genuinely unsatisfiable: no remaining free device run
+    # outside the taken chunks holds quantum[i] contiguous devices
+    if any(c is None for c in chunks):
+        leftovers = merge_ranges(
+            r for fs, fe in merged_free
+            for r in complement_ranges(
+                [(max(fs, s), min(fe, e)) for s, e in taken], fe
+            ) if r[0] >= fs
+        )
+        for slot, c in enumerate(chunks):
+            if c is None:
+                assert all(e - s < quanta[slot] for s, e in leftovers)
+
+
+def test_pack_ranges_wide_quantum_not_starved_by_sharing_split():
+    """Regression: the fewer-chunks-than-tenants halving runs at gcd
+    alignment, so a wide-quantum (highest-priority) tenant must re-coalesce
+    the fragments instead of starving when the unsplit range satisfies its
+    quantum."""
+    # (0,4) halves into (0,2)/(2,4); slot 0 (quantum 3) must still get (0,3)
+    assert pack_ranges([(0, 4)], 2, quantum=[3, 2]) == [(0, 3), None]
+    # 5-wide range, quanta [4,1]: slot 0 takes the aligned prefix, slot 1
+    # the remainder — nobody is dropped
+    assert pack_ranges([(0, 5)], 2, quantum=[4, 1]) == [(0, 4), (4, 5)]
+    # equal wide quanta still share the range (gcd carving + halving)
+    assert pack_ranges([(0, 8)], 2, quantum=[3, 3]) == [(0, 3), (3, 6)]
+
+
+@settings(max_examples=MAX_EXAMPLES, deadline=None)
+@given(range_lists, st.integers(1, 5), st.integers(1, 4))
+def test_pack_ranges_uniform_vector_matches_scalar(free, n, q):
+    scalar = pack_ranges(free, n, quantum=q)
+    vector = pack_ranges(free, n, quantum=[q] * n)
+    # uniform per-tenant quanta degenerate to scalar mode (None-padded tail)
+    assert [c for c in vector if c is not None] == scalar
+    assert vector[:len(scalar)] == scalar
+
+
+@settings(max_examples=MAX_EXAMPLES, deadline=None)
+@given(plan_strategy, quanta_lists)
+def test_per_tenant_packing_never_overlaps_fg_or_branches(plan, quanta):
+    for si, stage in enumerate(plan.stages()):
+        busy = plan.busy_device_ranges(si)
+        chunks = pack_ranges(plan.free_device_ranges(si), len(quanta),
+                             quantum=quanta)
+        for c in chunks:
+            if c is None:
+                continue
+            s, e = c
+            assert 0 <= s < e <= plan.num_gpus
+            assert e <= stage.gpus or s >= stage.gpus
+            for bs, be in busy:
+                assert e <= bs or s >= be
+
+
+# -- deficit-rotation starvation bound ---------------------------------------
+
+
+@settings(max_examples=30, deadline=None)
+@given(plan_strategy, st.integers(2, 4), st.integers(1, 3))
+def test_equal_priority_rotation_starvation_bound(plan, n, rounds_per_tenant):
+    """Over N = rounds_per_tenant * n iterations of the fair scheduler, every
+    equal-priority tenant runs at least floor(N / n) times whenever any peer
+    runs (deficit rotation: nobody's throughput stays at zero)."""
+    from repro.core.multiplex import BgTenant, Collocator, MultiplexConfig
+
+    tenants = [BgTenant(f"t{i}", priority=1, step_fn_factory=lambda m: None)
+               for i in range(n)]
+    col = Collocator(plan, MultiplexConfig(max_inflight=2, use_feedback=False),
+                     tenants=tenants)
+    N = rounds_per_tenant * n
+    ran = [0] * n
+    steps = [0] * n
+    for _ in range(N):
+        sched = col.schedule_tenants()
+        launched = [0] * n
+        for _si, slot, nsteps in sched:
+            launched[slot] += nsteps
+        for slot in range(n):
+            ran[slot] += launched[slot] > 0
+            steps[slot] += launched[slot]
+        col.note_launched(launched)
+    if any(ran):
+        bound = N // n
+        for slot in range(n):
+            assert ran[slot] >= bound, (ran, sched)
+        # and the guard's purpose: nobody is pinned at zero while peers run
+        assert all(s > 0 for s in steps), steps
