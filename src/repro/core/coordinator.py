@@ -44,6 +44,8 @@ class Job:
     steps_done: int = 0
     priority: int = 0  # background jobs: higher packs first into gaps
     step_fn_factory: Optional[Callable] = None  # mesh -> zero-arg bg step
+    weight: float = 1.0  # fair-share weight among equal-priority tenants
+    quantum: Optional[int] = None  # device-chunk alignment for gap packing
 
 
 @dataclass
@@ -54,11 +56,24 @@ class ClusterEvent:
 
 
 class ClusterCoordinator:
-    """Single source of truth for placement + plan lifecycle."""
+    """Single source of truth for placement + plan lifecycle.
 
-    def __init__(self, num_devices: int, hw: Optional[Hardware] = None):
+    ``clock`` injects a time source for the event log (the trace-driven
+    cluster simulator advances a virtual clock per replayed event; default
+    is wall time).  ``virtual_devices=True`` decouples the coordinator from
+    the jax process devices entirely: device ids ARE the healthy indices,
+    so a 1024-device cluster can be simulated on a 1-device host and
+    executable-cache eviction reasons about simulated ids instead of
+    positionally mapping onto ``jax.devices()``.
+    """
+
+    def __init__(self, num_devices: int, hw: Optional[Hardware] = None, *,
+                 clock: Optional[Callable[[], float]] = None,
+                 virtual_devices: bool = False):
         self.num_devices = num_devices
         self.hw = hw or Hardware()
+        self._clock = clock or time.time
+        self.virtual_devices = virtual_devices
         self.healthy = set(range(num_devices))
         self.jobs: Dict[str, Job] = {}
         self.events: List[ClusterEvent] = []
@@ -116,27 +131,28 @@ class ClusterCoordinator:
                 # its training state) through the cache
                 sig = (j.name,
                        getattr(factory, "signature", None) or factory)
-            out.append(BgTenant(j.name, j.priority, factory, signature=sig))
+            out.append(BgTenant(j.name, j.priority, factory, signature=sig,
+                                weight=j.weight, quantum=j.quantum))
         out.sort(key=lambda t: -t.priority)
         return out
 
     def _usable_devices(self) -> int:
-        """Largest power of two that fits the healthy set (planner search
-        space is powers of two)."""
-        from repro.core.plan import pow2_floor
-
-        return pow2_floor(len(self.healthy))
+        """Every healthy device.  The planner's scale set covers non-pow2
+        pool sizes (``plan_scales``), so a 1024-device pool with 3 dead
+        devices plans at 1021 instead of rounding down to 512 and silently
+        discarding ~half the survivors."""
+        return len(self.healthy)
 
     # -- elasticity / fault handling ---------------------------------------
 
     def handle_failure(self, device_id: int) -> Optional[BurstPlan]:
         """Device loss: shrink the healthy set and re-plan the foreground
-        job onto the surviving power-of-two subset. Returns the new plan.
+        job onto the exact surviving pool. Returns the new plan.
         Compiled bg steps whose submesh touched the dead device are evicted
         from the executable cache — their device-committed state is gone, so
         holding them alive would only pin dead jitted state."""
         self.healthy.discard(device_id)
-        self.events.append(ClusterEvent(time.time(), "failure", f"device {device_id}"))
+        self.events.append(ClusterEvent(self._clock(), "failure", f"device {device_id}"))
         self._evict_stale_executables()
         fg = self.foreground()
         if fg is None:
@@ -146,14 +162,14 @@ class ClusterCoordinator:
         fg.devices = tuple(sorted(self.healthy))
         self._drop_stale_measurements(old, fg.plan)
         self.events.append(
-            ClusterEvent(time.time(), "replan", f"G={fg.plan.num_gpus}")
+            ClusterEvent(self._clock(), "replan", f"G={fg.plan.num_gpus}")
         )
         return fg.plan
 
     def handle_join(self, device_ids) -> Optional[BurstPlan]:
         """Elastic scale-up: devices join, re-plan to exploit them."""
         self.healthy.update(device_ids)
-        self.events.append(ClusterEvent(time.time(), "join", f"+{len(device_ids)}"))
+        self.events.append(ClusterEvent(self._clock(), "join", f"+{len(device_ids)}"))
         self._evict_stale_executables()
         fg = self.foreground()
         if fg is None:
@@ -163,6 +179,19 @@ class ClusterCoordinator:
         fg.devices = tuple(sorted(self.healthy))
         self._drop_stale_measurements(old, fg.plan)
         return fg.plan
+
+    def handle_departure(self, name: str) -> bool:
+        """Tenant churn: a running job finishes/leaves the cluster.  The job
+        is marked done (so ``background_tenants`` stops rostering it) and
+        the departure is logged; the next ``collocate``/admission sweep sees
+        the shrunken roster.  Returns False for unknown/already-gone jobs
+        (trace replay may race a departure against a crash)."""
+        job = self.jobs.get(name)
+        if job is None or job.status != "running":
+            return False
+        job.status = "done"
+        self.events.append(ClusterEvent(self._clock(), "departure", name))
+        return True
 
     def _drop_stale_measurements(self, old: Optional[BurstPlan],
                                  new: Optional[BurstPlan]) -> None:
@@ -187,20 +216,26 @@ class ClusterCoordinator:
         """Drop executable-cache entries whose submesh uses a device outside
         the healthy set (device indices mapped positionally onto the process
         device list, the same positional contract ``submesh_from_range``
-        uses).  No-op when the cache is empty or jax is unavailable."""
+        uses).  In ``virtual_devices`` mode the healthy indices themselves
+        are the device ids — no jax needed, so simulated 1024-device
+        clusters get real eviction semantics on a 1-device host.  No-op
+        when the cache is empty or jax is unavailable."""
         if not self.exec_cache.entries:
             return 0
-        try:
-            import jax
+        if self.virtual_devices:
+            live = set(self.healthy)
+        else:
+            try:
+                import jax
 
-            devs = jax.devices()
-        except Exception:
-            return 0
-        live = {devs[i].id for i in self.healthy if i < len(devs)}
+                devs = jax.devices()
+            except Exception:
+                return 0
+            live = {devs[i].id for i in self.healthy if i < len(devs)}
         n = self.exec_cache.evict_stale(live)
         if n:
             self.events.append(
-                ClusterEvent(time.time(), "evict", f"{n} stale executables")
+                ClusterEvent(self._clock(), "evict", f"{n} stale executables")
             )
         return n
 
@@ -297,7 +332,7 @@ class ClusterCoordinator:
                     if decision.rejected:
                         rejected = tuple(t.job for t in decision.rejected)
                         self.events.append(ClusterEvent(
-                            time.time(), "admission", decision.row()
+                            self._clock(), "admission", decision.row()
                         ))
                     if decision.n_admitted == 0:
                         # nothing admitted: return the fg-only prediction —
@@ -322,7 +357,7 @@ class ClusterCoordinator:
                     self.interference = col.calibrate(self.collocation_results)
                 return res
             self.events.append(ClusterEvent(
-                time.time(), "fallback",
+                self._clock(), "fallback",
                 f"executable collocation wants {fg.plan.num_gpus} devices, "
                 f"process has {len(survivors)} healthy -> MultiplexSim",
             ))

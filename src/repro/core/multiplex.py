@@ -503,6 +503,10 @@ class CollocationResult:
     cluster_throughput: float = 0.0
     # tenants the admission controller refused to compile (job names)
     rejected_tenants: Tuple[str, ...] = ()
+    # Jain's index over per-tenant weighted service time, recorded at
+    # construction (mixed-quanta rosters included: service-time
+    # normalization makes heterogeneous step sizes comparable)
+    jain_index: float = 1.0
 
     def jain_fairness(self) -> float:
         """Jain's fairness index over per-tenant weighted *service time*
@@ -677,50 +681,57 @@ class Collocator:
         """chunk position -> roster slot permutation for one iteration.
 
         Chunk positions are priority-ordered (position 0 = largest chunk).
-        Within each equal-priority, equal-quantum subgroup the owning slot
-        is chosen by (largest deficit first, then round-robin rotation by
-        ``iteration``), so a tenant the packing starved accumulates deficit
-        and is promoted to the front — the starvation guard: over k
-        iterations every member of a k-tenant subgroup owns the subgroup's
-        best chunk at least once.  Rotation stays within equal quanta so
-        every rotated tenant's quantum tiles the chunk carved for the
-        canonical owner (mixed-quanta peers keep canonical ownership — a
-        ROADMAP follow-on).  Singleton subgroups keep the identity
-        assignment.
+        Within each equal-priority group the owning slot is chosen by
+        (largest deficit first, then round-robin rotation by ``iteration``),
+        so a tenant the packing starved accumulates deficit and is promoted
+        to the front — the starvation guard: over k iterations every member
+        of a k-tenant group owns the group's best chunk at least once.
+        Rotation spans *mixed quanta* too: ``_schedule_detail`` carves each
+        chunk position with the assigned tenant's own quantum (not the
+        canonical owner's), so any group member's submesh tiles its chunk by
+        construction — heterogeneous rosters no longer silently degrade to
+        fixed priority-order ownership.  ``quanta`` is kept for signature
+        stability (the carving, not the rotation, consumes it now).
+        Singleton groups keep the identity assignment.
         """
+        del quanta  # rotation no longer restricted to equal-quantum peers
         perm = list(range(len(roster)))
         for i, j in self._priority_groups(roster):
-            if j - i <= 1:
+            k = j - i
+            if k <= 1:
                 continue
-            subgroups: Dict[int, List[int]] = defaultdict(list)
-            for s in range(i, j):
-                subgroups[quanta[s]].append(s)
-            for members in subgroups.values():
-                k = len(members)
-                if k <= 1:
-                    continue
-                order = sorted(
-                    members,
-                    key=lambda s: (-self._deficits[s],
-                                   (members.index(s) - iteration) % k),
-                )
-                for pos, slot in zip(members, order):
-                    perm[pos] = slot
+            order = sorted(
+                range(i, j),
+                key=lambda s: (-self._deficits[s], (s - i - iteration) % k),
+            )
+            for pos, slot in zip(range(i, j), order):
+                perm[pos] = slot
         return perm
 
-    def _slot_step_times(self, n: int,
-                         gap_chunks: Dict[int, list]) -> List[float]:
+    def _slot_step_times(self, n: int, gap_chunks: Dict[int, list],
+                         perm: Optional[Sequence[int]] = None) -> List[float]:
         """Per-slot bg step-time quantum: each tenant's step is sized to the
         smallest gap *it* occupies in the canonical layout, not the global
-        gap minimum — a tenant holding only wide gaps runs bigger steps."""
+        gap minimum — a tenant holding only wide gaps runs bigger steps.
+        A step's size is a property of the tenant's compiled executable, so
+        it is sized once from the canonical (identity) layout — a rotation
+        that moves the tenant into a narrower gap must fall back, not
+        shrink the step mid-run.  ``perm`` overrides the position -> slot
+        mapping for callers that want layout-specific sizing."""
         cfg = self.cfg
         if not cfg.use_granularity:
             return [cfg.bg_step_time] * n
         stages = self.plan.stages()
         out = [self.bg_step_quantum] * n
+        slot_durs: Dict[int, list] = defaultdict(list)
+        for si, chunks in gap_chunks.items():
+            for pos, c in enumerate(chunks):
+                if c is None:
+                    continue
+                slot = perm[pos] if perm is not None else pos
+                slot_durs[slot].append(stages[si].duration)
         for slot in range(n):
-            durs = [stages[si].duration for si, chunks in gap_chunks.items()
-                    if slot < len(chunks) and chunks[slot] is not None]
+            durs = slot_durs.get(slot)
             if durs:
                 t = min(cfg.bg_step_time,
                         max(cfg.bg_min_step_time, min(durs) / 2.0))
@@ -736,13 +747,17 @@ class Collocator:
         (start, end), n_bg_steps, bg_step_time) rows.
 
         Each unbanned gap's per-stage free ranges are carved into per-tenant
-        chunks (``pack_ranges`` per-tenant mode, slot *i*'s chunk aligned to
-        tenant *i*'s quantum); the canonical owner of chunk position *i* is
-        slot *i*, then ``_fair_assignment`` rotates ownership within
-        equal-priority, equal-quantum subgroups (so every rotated tenant's
-        quantum tiles its chunk by construction, and the executable path's
-        pre-compiled (position, tenant) combinations are exactly the
-        schedulable ones).  Steps pace at
+        chunks (``pack_ranges`` per-tenant mode).  ``_fair_assignment``
+        first maps chunk positions to owning slots (deficit promotion +
+        round-robin rotation within each equal-priority group, mixed quanta
+        included), and the carving aligns each position to the *assigned*
+        tenant's quantum — so every owner's submesh tiles its chunk by
+        construction, whatever the rotation round.  When any tenant carries
+        a significant fair-share deficit, the per-position deficits feed
+        ``pack_ranges``'s share-sizing (``shares``): lagging tenants claim
+        *wider* chunks instead of rotating into the same equal-split chunk
+        forever; a gap falls back to the equal-halving layout if share
+        sizing would drop a slot the equal split served.  Steps pace at
         ``min(floor(gap / slot_step_time), max_inflight)`` per tenant.
         """
         n = n_tenants if n_tenants is not None else max(1, len(self.tenants))
@@ -751,20 +766,35 @@ class Collocator:
         roster = list(roster) if roster is not None else self._roster_for(n)
         quanta = self._roster_quanta(roster, bg_model)
         it = self._round if iteration is None else iteration
+        perm = self._fair_assignment(roster, it, quanta)
+        # carve at the assigned owner's quantum; size by its deficit share
+        pos_quanta = [quanta[perm[pos]] for pos in range(n)]
+        unit = max(self.bg_step_quantum, 1e-12)
+        deficits = [self._deficits[s] for s in range(n)]
+        pos_shares = None
+        if any(d > 0.5 * unit for d in deficits):
+            pos_shares = [1.0 + min(3.0, deficits[perm[pos]] / unit)
+                          for pos in range(n)]
         gap_chunks: Dict[int, list] = {}
         for gap in self.plan.gaps():
             op = f"stage{gap.stage_index}"
             if self.cfg.use_feedback and not self.monitor.collocation_allowed(op):
                 continue
-            chunks = pack_ranges(
-                self.plan.free_device_ranges(gap.stage_index), n,
-                quantum=quanta,
-            )
+            free = self.plan.free_device_ranges(gap.stage_index)
+            chunks = pack_ranges(free, n, quantum=pos_quanta)
+            if pos_shares is not None:
+                sized = pack_ranges(free, n, quantum=pos_quanta,
+                                    shares=pos_shares)
+                # share sizing must never starve a slot the equal split
+                # served (a boosted claim can make a later slot
+                # unsatisfiable in tight layouts)
+                if ({i for i, c in enumerate(chunks) if c is not None}
+                        <= {i for i, c in enumerate(sized) if c is not None}):
+                    chunks = sized
             if any(c is not None for c in chunks):
                 gap_chunks[gap.stage_index] = chunks
         step_t = self._slot_step_times(n, gap_chunks)
         self._last_step_t = step_t
-        perm = self._fair_assignment(roster, it, quanta)
         stages = self.plan.stages()
         rows: List[Tuple[int, int, int, Tuple[int, int], int, float]] = []
         for si in sorted(gap_chunks):
@@ -774,17 +804,20 @@ class Collocator:
                       if c is not None}
             for pos in sorted(assign):
                 slot = assign[pos]
+                cs, ce = chunks[pos]
                 nsteps = math.floor(dur / step_t[slot])
-                if nsteps <= 0 and slot != pos:
-                    # a rotated-in tenant whose (canonically-sized) step is
-                    # too big for this gap would leave the chunk idle — hand
-                    # it back to the canonical owner rather than waste it
+                if (nsteps <= 0 and slot != pos
+                        and (ce - cs) % quanta[pos] == 0):
+                    # a rotated-in tenant whose step is too big for this gap
+                    # would leave the chunk idle — hand it back to the
+                    # canonical owner (when its quantum tiles the chunk)
+                    # rather than waste it
                     slot = pos
                     nsteps = math.floor(dur / step_t[slot])
                 if self.cfg.use_pacing:
                     nsteps = min(nsteps, self.cfg.max_inflight)
                 if nsteps > 0:
-                    rows.append((si, slot, pos, chunks[pos], nsteps,
+                    rows.append((si, slot, pos, (cs, ce), nsteps,
                                  step_t[slot]))
         return rows
 
@@ -1006,7 +1039,7 @@ class Collocator:
             )
             for slot, t in enumerate(roster)
         )
-        return CollocationResult(
+        res = CollocationResult(
             fg_iter_time=fg_col,
             fg_iter_time_isolated=fg_iso,
             fg_slowdown=fg_col / max(fg_iso, 1e-30),
@@ -1017,6 +1050,45 @@ class Collocator:
             tenants=rows,
             cluster_throughput=cluster,
         )
+        res.jain_index = res.jain_fairness()
+        return res
+
+    def predicted_cache_keys(self, n_tenants: Optional[int] = None,
+                             bg_model: int = 1,
+                             device_ids: Optional[Sequence[int]] = None,
+                             iteration: Optional[int] = None) -> List[tuple]:
+        """Prediction-only collocation path: the ``ExecutableCache`` keys
+        ``run_executable`` would compile for this iteration's schedule,
+        without touching devices or jax.
+
+        Each scheduled (chunk, tenant) pair maps to the same
+        ``(signature, device ids, mesh shape)`` triple ``ExecutableCache.key``
+        derives from a real submesh — ``device_ids`` supplies the positional
+        id mapping (the trace-driven cluster sim passes the sorted healthy
+        set; default: identity).  Lets a device-free caller replay realistic
+        cache reuse/eviction dynamics (LRU bound, ``evict_stale`` after
+        re-plans) at simulated cluster scale.  Deduplicated, schedule order.
+        """
+        n = n_tenants if n_tenants is not None else max(1, len(self.tenants))
+        if n <= 0:
+            return []
+        roster = self._roster_for(n)
+        quanta = self._roster_quanta(roster, bg_model)
+        keys: List[tuple] = []
+        seen = set()
+        for _si, slot, _pos, (cs, ce), _n, _t in self._schedule_detail(
+                n, bg_model, iteration=iteration):
+            if device_ids is not None:
+                ids = tuple(device_ids[cs:ce])
+            else:
+                ids = tuple(range(cs, ce))
+            model = quanta[slot]
+            key = (roster[slot].cache_signature, ids,
+                   ((ce - cs) // model, model))
+            if key not in seen:
+                seen.add(key)
+                keys.append(key)
+        return keys
 
     def admit(self, *, max_fg_slowdown: float = 1.33, bg_model: int = 1,
               max_tenants: Optional[int] = None) -> AdmissionDecision:
@@ -1141,21 +1213,36 @@ class Collocator:
         # steady state discards that sample.
         hits0 = self.cache.hits if self.cache else 0
         miss0 = self.cache.misses if self.cache else 0
-        bg_fns: Dict[Tuple[int, int, int], Callable] = {}
-        chunk_mesh: Dict[Tuple[int, int], object] = {}
+        # bg step fns are keyed by (device chunk, tenant slot) — NOT by
+        # (stage, position): rotation and deficit share-sizing re-carve the
+        # chunks per iteration, and the same chunk reappearing in another
+        # stage (or rotation round) must reuse the same jitted step.  Meshes
+        # are keyed by (chunk, model width) so a rotated-in tenant whose
+        # quantum differs from the canonical owner's gets a mesh shaped for
+        # ITS model axis over the same devices.
+        bg_fns: Dict[Tuple[Tuple[int, int], int], Callable] = {}
+        bg_meshes: Dict[Tuple[int, int, int], object] = {}
         slot_devices: Dict[int, int] = defaultdict(int)
-        lazy_builds: List[Tuple[int, int, int]] = []
+        lazy_builds: List[Tuple[Tuple[int, int], int]] = []
 
-        def build_bg_fn(si: int, pos: int, slot: int) -> Optional[Callable]:
-            fn = bg_fns.get((si, pos, slot))
+        def build_bg_fn(chunk: Tuple[int, int],
+                        slot: int) -> Optional[Callable]:
+            fn = bg_fns.get((chunk, slot))
             if fn is not None:
                 return fn
-            mesh = chunk_mesh.get((si, pos))
-            if mesh is None or slot >= len(roster):
+            if slot >= len(roster):
                 return None
+            cs, ce = chunk
+            model = quanta[slot]
+            if (ce - cs) % model:
+                return None  # scheduler never emits this; belt-and-braces
+            mesh = bg_meshes.get((cs, ce, model))
+            if mesh is None:
+                mesh = submesh_from_range(cs, ce, model=model, devices=devs)
+                bg_meshes[(cs, ce, model)] = mesh
             tnt = roster[slot]
 
-            def build(t=tnt, m=mesh, combo=(si, pos, slot)):
+            def build(t=tnt, m=mesh, combo=(chunk, slot)):
                 # only a REAL build marks the iteration as a compile
                 # warm-up — a warm-cache hit costs nothing and must not
                 # make run_iter discard the iteration's QoS measurements
@@ -1167,15 +1254,15 @@ class Collocator:
                 fn = self.cache.get_or_build(key, build)
             else:
                 fn = build()
-            bg_fns[(si, pos, slot)] = fn
+            bg_fns[(chunk, slot)] = fn
             return fn
 
         for si, slots in split.bg_tenants.items():
             for pos, entry in enumerate(slots):
                 if pos >= n_slots or entry is None:
                     continue
-                chunk_mesh[(si, pos)] = entry[1]
-                build_bg_fn(si, pos, pos)  # canonical owner pre-compiles
+                bg_meshes[(entry[0][0], entry[0][1], quanta[pos])] = entry[1]
+                build_bg_fn(entry[0], pos)  # canonical owner pre-compiles
 
         # compile warmup outside the timed region (cache hits re-warm too:
         # one step is cheap and keeps first-iteration timing honest)
@@ -1190,9 +1277,10 @@ class Collocator:
                                       iteration=self._round, roster=roster)
                 if collocate else []
             )
-            by_stage: Dict[int, List[Tuple[int, int, int]]] = defaultdict(list)
-            for si, slot, pos, _c, n, _t in rows:
-                by_stage[si].append((slot, pos, n))
+            by_stage: Dict[int, List[Tuple[int, int, Tuple[int, int], int]]] = (
+                defaultdict(list))
+            for si, slot, pos, c, n, _t in rows:
+                by_stage[si].append((slot, pos, c, n))
             # per-tenant pacing: each tenant's submesh is a disjoint device
             # set, so the in-flight bound (non-preemptive tail control)
             # applies per tenant, not across them
@@ -1205,8 +1293,8 @@ class Collocator:
             t_start = time_fn()
             for si, fn in enumerate(fg_fns):
                 op = f"stage{si}"
-                for slot, pos, n_bg in sorted(by_stage.get(si, ())):
-                    bf = build_bg_fn(si, pos, slot)  # lazy for rotated combos
+                for slot, pos, chunk, n_bg in sorted(by_stage.get(si, ())):
+                    bf = build_bg_fn(chunk, slot)  # lazy for rotated combos
                     if bf is None:
                         continue
                     q = inflight[slot]
@@ -1357,7 +1445,7 @@ class Collocator:
             )
             for slot, t in enumerate(roster)
         )
-        return CollocationResult(
+        res = CollocationResult(
             fg_iter_time=fg_col,
             fg_iter_time_isolated=fg_iso,
             fg_slowdown=slowdown,
@@ -1372,6 +1460,8 @@ class Collocator:
             stage_slowdowns=stage_slowdowns,
             cluster_throughput=cluster,
         )
+        res.jain_index = res.jain_fairness()
+        return res
 
     def run_iteration(self, fg_stage_fns: List[Callable], bg_step_fn: Callable,
                       time_fn: Callable[[], float]) -> Dict[str, float]:

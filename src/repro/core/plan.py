@@ -128,7 +128,7 @@ def normalize_quanta(quanta, n: int) -> List[int]:
     return q
 
 
-def pack_ranges(free, n: int, quantum=1):
+def pack_ranges(free, n: int, quantum=1, shares=None):
     """Carve up to ``n`` disjoint chunks out of free [start, end) ranges for
     priority-ordered tenants.
 
@@ -155,6 +155,16 @@ def pack_ranges(free, n: int, quantum=1):
     is never starved by the sharing split when the unsplit range would have
     satisfied it.  A sequence shorter than ``n`` is padded with its last
     value.
+
+    ``shares`` (per-tenant mode only) sizes chunks by weighted share instead
+    of equal halving: slot *i*'s claim is capped at its ``quantum[i]``-
+    aligned proportional share ``total_free * shares[i] / sum(shares)``
+    (floor: one quantum), and earlier slots leave the un-taken surplus to
+    later ones.  This is the deficit-sizing hook: a lagging tenant's share
+    grows with its fair-share deficit, so it claims a *wider* chunk instead
+    of rotating into the same equal-split chunk forever.  ``shares=None``
+    (or uniform shares over a single free run) reproduces the equal-halving
+    layout exactly.
     """
     if n <= 0:
         return []
@@ -165,6 +175,8 @@ def pack_ranges(free, n: int, quantum=1):
     else:
         quanta = [quantum] * n
         base = quantum
+    if shares is not None and not per_tenant:
+        raise ValueError("shares requires the per-tenant quantum mode")
     chunks: List[Tuple[int, int]] = []
     for s, e in merge_ranges(free):
         m = (e - s) - (e - s) % base
@@ -174,18 +186,32 @@ def pack_ranges(free, n: int, quantum=1):
         return [None] * n if per_tenant else []
     key = lambda r: (-(r[1] - r[0]), r[0])
     chunks.sort(key=key)
-    while len(chunks) < n:
-        s, e = chunks[0]
-        if e - s < 2 * base:  # largest can't split -> none can
-            break
-        half = ((e - s) // 2 // base) * base
-        chunks[0:1] = [(s, s + half), (s + half, e)]
-        chunks.sort(key=key)
+    caps = [None] * n
+    if shares is not None:
+        w = [max(0.0, float(v)) for v in shares][:n]
+        w += [1.0] * (n - len(w))
+        wsum = sum(w)
+        if wsum > 0.0:
+            total = sum(e - s for s, e in chunks)
+            caps = [
+                max(q, int(total * wi / wsum) // q * q)
+                for q, wi in zip(quanta, w)
+            ]
+        else:
+            shares = None
+    if shares is None:
+        while len(chunks) < n:
+            s, e = chunks[0]
+            if e - s < 2 * base:  # largest can't split -> none can
+                break
+            half = ((e - s) // 2 // base) * base
+            chunks[0:1] = [(s, s + half), (s + half, e)]
+            chunks.sort(key=key)
     if not per_tenant:
         return sorted(chunks[:n], key=key)
     out: List[Optional[Tuple[int, int]]] = []
     pool = list(chunks)
-    for q in quanta:
+    for q, cap in zip(quanta, caps):
         cand = [
             (-((e - s) - (e - s) % q), s, i)
             for i, (s, e) in enumerate(pool)
@@ -207,6 +233,9 @@ def pack_ranges(free, n: int, quantum=1):
         negsz, s, i = min(cand)  # largest aligned size, then lowest start
         e = pool[i][1]
         take = -negsz
+        if cap is not None:
+            # share-sized claim: take the proportional cap, leave the rest
+            take = min(take, cap)
         # claim the aligned prefix; the remainder returns to the pool
         pool[i:i + 1] = [(s + take, e)] if e > s + take else []
         out.append((s, s + take))

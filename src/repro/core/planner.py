@@ -47,7 +47,12 @@ import numpy as np
 
 from repro.core.costmodel import Hardware, comm_matrix, comm_time
 from repro.core.plan import BurstPlan, LayerPlan
-from repro.core.profiler import CostedBlock, CostedLayer, powers_of_two
+from repro.core.profiler import (
+    CostedBlock,
+    CostedLayer,
+    plan_scales,
+    powers_of_two,
+)
 
 INF = float("inf")
 
@@ -396,7 +401,12 @@ def plan(
         chain = profile_graph(graph, num_gpus, hw)
     else:
         chain = list(graph)
-    scales = powers_of_two(num_gpus)
+    scales = plan_scales(num_gpus)
+    first = next((l for l in chain if isinstance(l, CostedLayer)), None)
+    if first is not None:
+        # a pre-costed chain may carry tables for the pow2-only scale set;
+        # never index a scale its tables don't cover
+        scales = [s for s in scales if s in first.comp]
     if engine == "reference":
         return _plan_reference(chain, num_gpus, scales, amp_limit, hw)
     return _plan_vectorized(chain, num_gpus, scales, amp_limit, hw)
@@ -528,7 +538,7 @@ def plan_encdec(
     if engine not in ("vectorized", "reference"):
         raise ValueError(f"unknown planner engine: {engine!r}")
     hw = hw or Hardware()
-    scales = powers_of_two(num_gpus)
+    scales = plan_scales(num_gpus)
     enc_chain = profile_graph(list(graph.encoder), num_gpus, hw)
     dec_chain = profile_graph(list(graph.decoder), num_gpus, hw)
     if engine == "reference":

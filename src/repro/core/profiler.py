@@ -35,6 +35,25 @@ def powers_of_two(G: int) -> list:
     return out
 
 
+def plan_scales(G: int) -> list:
+    """Planner search space for a G-device pool.
+
+    A power-of-two pool keeps the paper's §7.4 pow2-only search space, so
+    every pre-existing configuration plans bit-identically.  A non-power-of
+    -two pool — the elastic case after device failures — used to round down
+    via ``pow2_floor`` and silently discard up to ~half the survivors (a
+    1024-device pool with 3 dead devices planned as 512).  Here the scale
+    set is extended with the exact pool size plus the 3·2^k midpoints that
+    fit, so the DP can place layers on all surviving devices wherever
+    amplification allows, falling back to smaller scales only where the
+    amp limit genuinely binds."""
+    out = powers_of_two(G)
+    if out[-1] != G:
+        mids = [3 * p // 2 for p in out if p >= 2 and 3 * p // 2 <= G]
+        out = sorted(set(out) | set(mids) | {G})
+    return out
+
+
 @dataclass(frozen=True)
 class CostedLayer:
     name: str
@@ -74,7 +93,7 @@ def profile_node(node: LayerNode, scales: Sequence[int], hw: Hardware) -> Costed
 
 def profile_graph(graph, G: int, hw: Hardware) -> list:
     """LayerGraph -> chain of CostedLayer / CostedBlock."""
-    scales = powers_of_two(G)
+    scales = plan_scales(G)
     out = []
     for el in graph:
         if isinstance(el, LayerNode):

@@ -36,15 +36,25 @@ def make_mesh(data: int, model: int, pod: int = 1, devices: Optional[Sequence] =
 
 
 def largest_pow2_mesh(n_devices: int, devices: Optional[Sequence] = None):
-    """Elastic re-mesh: biggest power-of-two (data, model) mesh that fits
-    n_devices, favoring the data axis 4:1 (used after failures).  With a
-    non-power-of-two survivor count the excess devices are left out of the
-    mesh (the planner's scale set is powers of two)."""
-    g = pow2_floor(n_devices)
-    model = 1
-    while model * model * 4 <= g:
-        model *= 2
-    data = g // model
+    """Elastic re-mesh: the largest (data, model) mesh that fits n_devices,
+    favoring the data axis 4:1 (used after failures).  The model axis stays
+    a power of two — sharding rules genuinely need it to divide head/hidden
+    dims — but the data axis is just a batch split, so a non-power-of-two
+    survivor count keeps every device the model width allows (7 survivors
+    -> 7x1, not 4x1; the planner's scale set covers non-pow2 pools too).
+    Only a sub-``model`` remainder is ever left out of the mesh, and only
+    when a narrower model axis would not cover more devices."""
+    cap = 1
+    while cap * cap * 4 <= pow2_floor(n_devices):
+        cap *= 2
+    candidates = []
+    m = 1
+    while m <= cap:
+        candidates.append(m)
+        m *= 2
+    # widest model axis within the 4:1 bound that maximizes device coverage
+    model = max(candidates, key=lambda m: (n_devices // m * m, m))
+    data = n_devices // model
     if devices is not None:
         devices = list(devices)[: data * model]
     return make_mesh(data, model, devices=devices)

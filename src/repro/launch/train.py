@@ -36,7 +36,7 @@ def _bg_submeshes(fg_devices: int, amp_limit: float, hw, cfg, n: int):
     import jax
 
     from repro.configs import TRAIN_4K
-    from repro.core.plan import pack_ranges, pow2_floor
+    from repro.core.plan import pack_ranges
     from repro.core.planner import plan as make_plan
     from repro.launch.mesh import submesh_from_range
     from repro.models.graph import build_lm_graph
@@ -44,8 +44,7 @@ def _bg_submeshes(fg_devices: int, amp_limit: float, hw, cfg, n: int):
     n_dev = len(jax.devices())
     if n_dev <= fg_devices:
         return [None] * n, list(range(n))
-    host_plan = make_plan(build_lm_graph(cfg, TRAIN_4K), pow2_floor(n_dev),
-                          amp_limit, hw)
+    host_plan = make_plan(build_lm_graph(cfg, TRAIN_4K), n_dev, amp_limit, hw)
     free = []
     for si in range(len(host_plan.stages())):
         for lo, hi in host_plan.free_device_ranges(si):

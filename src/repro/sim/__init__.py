@@ -1,0 +1,40 @@
+"""Trace-driven cluster simulation at deployment scale.
+
+Replays seeded or hand-written cluster event traces (job churn, device
+failures, elastic rejoins — JSON schema in ``repro.sim.trace``) through the
+real control plane: ``ClusterCoordinator`` on a virtual clock, the
+vectorized matrix-DP planner for every re-plan, ``Collocator.admit()``
+under the measurement-calibrated ``InterferenceModel``, and the
+``ExecutableCache`` via the prediction-only collocation path — no
+accelerator or compilation anywhere, so 1024 simulated devices replay in
+seconds on a laptop.
+
+CLI::
+
+    PYTHONPATH=src python benchmarks/bench_cluster_sim.py --smoke --record
+
+emits the cluster-goodput-vs-scale curve (128/512/1024 devices, burst
+multi-task vs single-task data parallelism) into BENCH_cluster_sim.json
+and checks replay determinism; traces live under ``benchmarks/traces/``.
+"""
+from repro.sim.cluster_sim import ClusterSim, Segment, SimReport
+from repro.sim.trace import (
+    Trace,
+    TraceEvent,
+    generate_failure_storm,
+    generate_trace,
+    load_trace,
+    save_trace,
+)
+
+__all__ = [
+    "ClusterSim",
+    "Segment",
+    "SimReport",
+    "Trace",
+    "TraceEvent",
+    "generate_failure_storm",
+    "generate_trace",
+    "load_trace",
+    "save_trace",
+]

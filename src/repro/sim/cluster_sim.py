@@ -1,0 +1,336 @@
+"""Trace-driven cluster simulator: the real control plane, a virtual clock.
+
+Replays a ``repro.sim.trace.Trace`` (job arrivals / departures, device
+failures / rejoins) through the REAL coordination stack — no stubs:
+
+  * ``ClusterCoordinator`` with an injected virtual clock and
+    ``virtual_devices=True`` (device ids are the simulated healthy indices,
+    so a 1024-device cluster runs on a 0-accelerator host),
+  * the vectorized matrix-DP planner for every elasticity re-plan
+    (failures / joins re-plan onto the exact surviving pool, non-pow2
+    included),
+  * ``Collocator.admit()`` — the predict-before-compile admission sweep
+    under the measurement-calibrated ``InterferenceModel`` — and
+    ``Collocator.predict()`` for the operating point of each epoch,
+  * ``MultiplexSim`` as a per-epoch discrete-event cross-check of the
+    foreground slowdown,
+  * the coordinator's ``ExecutableCache``, touched through
+    ``Collocator.predicted_cache_keys`` so compile reuse, the LRU bound and
+    post-failure ``evict_stale`` behave exactly as in a real deployment.
+
+Between consecutive trace events the cluster state is constant (an
+*epoch*); the simulator integrates goodput over each epoch and re-derives
+the operating point after every event.  Goodput is reported in
+single-device equivalents (one unit = one device running the job
+standalone, the paper's speedup axis):
+
+  fg goodput rate = plan.speedup / predicted fg slowdown
+  bg goodput rate = sum_t steps/iter x step_time x chunk_width x eff(t)
+                    / collocated iteration time,
+                    eff = (step_time / bg_step_time) ** 0.25
+
+(the ``eff`` factor discounts granularity-reduced background steps: a
+tenant forced to tiny steps by small gaps does proportionally less useful
+work per device-second).  The cluster-throughput-vs-scale curve from
+``benchmarks/bench_cluster_sim.py`` compares total goodput against the
+single-task data-parallel baseline ``plan_data_parallel(G).speedup``.
+
+Everything is deterministic: traces are seeded, the replay draws no
+randomness, and ``SimReport.to_json()`` round-trips bit-identically
+(pinned by tests/test_cluster_sim.py).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+from repro.core.coordinator import ClusterCoordinator, Job, QOS_SLOWDOWN_BOUND
+from repro.core.costmodel import Hardware
+from repro.core.multiplex import (
+    Collocator,
+    InterferenceModel,
+    MultiplexConfig,
+    MultiplexSim,
+    QoSMonitor,
+)
+from repro.sim.trace import Trace
+
+
+def _bg_factory(mesh):  # pragma: no cover - never dispatched in simulation
+    return lambda: None
+
+
+@dataclass
+class Segment:
+    """One constant-state epoch: [t0, t1) between consecutive trace events."""
+
+    t0: float
+    t1: float
+    n_healthy: int
+    plan_gpus: int
+    n_tenants: int
+    n_admitted: int
+    fg_slowdown: float
+    sim_fg_slowdown: float  # MultiplexSim cross-check (single-tenant DES)
+    fg_rate: float          # single-device equivalents / virtual second
+    bg_rate: float
+    jain: float
+
+    def to_json(self) -> dict:
+        d = dict(self.__dict__)
+        for k, v in d.items():
+            if isinstance(v, float):
+                d[k] = round(v, 9)
+        return d
+
+
+@dataclass
+class SimReport:
+    """Aggregated outcome of one trace replay."""
+
+    n_devices: int
+    horizon: float
+    n_events: int
+    n_replans: int          # planner invocations from failures/joins
+    n_epochs: int
+    admitted_total: int     # tenant-epochs admitted
+    rejected_total: int     # tenant-epochs refused by the QoS bound
+    fg_goodput: float       # time-integrated, in device x seconds
+    bg_goodput: float
+    cache_hits: int
+    cache_misses: int
+    cache_evictions: int
+    cache_final_size: int
+    jain_time_avg: float    # time-weighted schedule-level Jain index
+    jain_service: float     # Jain over per-job accumulated weighted service
+    mean_fg_slowdown: float  # time-weighted
+    per_job_service: Dict[str, float] = field(default_factory=dict)
+    segments: List[Segment] = field(default_factory=list)
+
+    @property
+    def total_goodput(self) -> float:
+        return self.fg_goodput + self.bg_goodput
+
+    @property
+    def mean_goodput_rate(self) -> float:
+        """Cluster throughput in single-device equivalents (curve y-axis)."""
+        return self.total_goodput / max(self.horizon, 1e-30)
+
+    def to_json(self, *, with_segments: bool = False) -> dict:
+        d = {
+            k: (round(v, 9) if isinstance(v, float) else v)
+            for k, v in self.__dict__.items()
+            if k not in ("segments", "per_job_service")
+        }
+        d["per_job_service"] = {
+            k: round(v, 9) for k, v in sorted(self.per_job_service.items())
+        }
+        d["total_goodput"] = round(self.total_goodput, 9)
+        d["mean_goodput_rate"] = round(self.mean_goodput_rate, 9)
+        if with_segments:
+            d["segments"] = [s.to_json() for s in self.segments]
+        return d
+
+
+class ClusterSim:
+    """Replay a trace through the real coordinator / admission stack.
+
+    ``graph`` is the foreground job's layer graph (planned by the matrix-DP
+    planner at every pool size the trace visits); ``interference`` seeds
+    the calibrated model used by admission + prediction — pass the fit from
+    measured collocation records so the simulation carries measured
+    hardware behavior instead of optimism.
+    """
+
+    def __init__(
+        self,
+        trace: Trace,
+        graph,
+        *,
+        hw: Optional[Hardware] = None,
+        amp_limit: float = 2.0,
+        mcfg: Optional[MultiplexConfig] = None,
+        interference: Optional[InterferenceModel] = None,
+        qos_bound: float = QOS_SLOWDOWN_BOUND,
+        fg_job: str = "fg",
+    ):
+        self.trace = trace
+        self.graph = graph
+        self.hw = hw or Hardware()
+        self.amp_limit = amp_limit
+        # virtual replay never dispatches async work, so the pacing bound
+        # models steady-state gap occupancy rather than a real in-flight
+        # window: leave it wide and let gap duration / step time cap steps
+        self.mcfg = mcfg or MultiplexConfig(max_inflight=10 ** 6)
+        self.interference = interference or InterferenceModel()
+        self.qos_bound = qos_bound
+        self.fg_job = fg_job
+        self._t = 0.0
+
+    # -- replay -------------------------------------------------------------
+
+    def run(self, *, keep_segments: bool = True) -> SimReport:
+        tr = self.trace
+        self._t = 0.0
+        coord = ClusterCoordinator(
+            tr.n_devices, self.hw, clock=lambda: self._t,
+            virtual_devices=True,
+        )
+        coord.interference = self.interference
+        coord.submit_foreground(
+            Job(self.fg_job, "foreground", self.graph,
+                amp_limit=self.amp_limit)
+        )
+        horizon = tr.horizon or (tr.events[-1].t if tr.events else 0.0)
+        segments: List[Segment] = []
+        per_job: Dict[str, float] = {}
+        n_replans = 0
+        admitted_total = rejected_total = 0
+        epoch = self._epoch(coord)
+        t_prev = 0.0
+        boundaries = [e.t for e in tr.events] + [horizon]
+        events = list(tr.events) + [None]
+        for ev, t_ev in zip(events, boundaries):
+            t_ev = min(max(t_ev, t_prev), horizon)
+            if t_ev > t_prev:
+                seg = self._integrate(epoch, t_prev, t_ev, per_job)
+                segments.append(seg)
+                admitted_total += seg.n_admitted
+                rejected_total += seg.n_tenants - seg.n_admitted
+                t_prev = t_ev
+            if ev is None:
+                break
+            self._t = ev.t
+            changed, replanned = self._apply(coord, ev)
+            n_replans += replanned
+            if changed:
+                epoch = self._epoch(coord)
+        total_t = sum(s.t1 - s.t0 for s in segments) or 1e-30
+        jain_avg = sum(s.jain * (s.t1 - s.t0) for s in segments) / total_t
+        slow_avg = sum(
+            s.fg_slowdown * (s.t1 - s.t0) for s in segments) / total_t
+        return SimReport(
+            n_devices=tr.n_devices,
+            horizon=horizon,
+            n_events=len(tr.events),
+            n_replans=n_replans,
+            n_epochs=len(segments),
+            admitted_total=admitted_total,
+            rejected_total=rejected_total,
+            fg_goodput=sum(s.fg_rate * (s.t1 - s.t0) for s in segments),
+            bg_goodput=sum(s.bg_rate * (s.t1 - s.t0) for s in segments),
+            cache_hits=coord.exec_cache.hits,
+            cache_misses=coord.exec_cache.misses,
+            cache_evictions=coord.exec_cache.evictions,
+            cache_final_size=len(coord.exec_cache),
+            jain_time_avg=jain_avg,
+            jain_service=_jain(list(per_job.values())),
+            mean_fg_slowdown=slow_avg,
+            per_job_service=per_job,
+            segments=segments if keep_segments else [],
+        )
+
+    # -- event application --------------------------------------------------
+
+    def _apply(self, coord: ClusterCoordinator, ev) -> Tuple[bool, int]:
+        """Returns (state_changed, n_replans)."""
+        if ev.kind == "job_arrival":
+            coord.submit_background(Job(
+                ev.job, "background", [], priority=ev.priority or 1,
+                step_fn_factory=_bg_factory,
+                weight=ev.weight if ev.weight is not None else 1.0,
+                quantum=ev.quantum,
+            ))
+            return True, 0
+        if ev.kind == "job_departure":
+            return coord.handle_departure(ev.job), 0
+        if ev.kind == "device_failure":
+            if ev.device not in coord.healthy or len(coord.healthy) <= 1:
+                return False, 0
+            coord.handle_failure(ev.device)
+            return True, 1
+        if ev.kind == "device_join":
+            if ev.device in coord.healthy:
+                return False, 0
+            coord.handle_join([ev.device])
+            return True, 1
+        raise ValueError(f"unknown trace event kind: {ev.kind!r}")
+
+    # -- per-epoch operating point ------------------------------------------
+
+    def _epoch(self, coord: ClusterCoordinator) -> dict:
+        """Re-derive the operating point for the current cluster state:
+        admission sweep + prediction + executable-cache traffic."""
+        fg = coord.foreground()
+        plan = fg.plan
+        roster = coord.background_tenants(_bg_factory)
+        # fresh monitor per epoch: predictions carry no measured QoS bans
+        col = Collocator(plan, self.mcfg, monitor=QoSMonitor(),
+                         tenants=roster, interference=self.interference)
+        k = 0
+        if roster:
+            decision = col.admit(max_fg_slowdown=self.qos_bound)
+            coord.last_admission = decision
+            k = decision.n_admitted
+        pred = col.predict(k)
+        # prediction-only collocation path: the cache keys this schedule
+        # would compile.  Positional device ids come from the sorted healthy
+        # set — exactly what run_executable's submeshes would use.
+        ids = sorted(coord.healthy)
+        for key in col.predicted_cache_keys(k, device_ids=ids):
+            assert set(key[1]) <= coord.healthy, (key, coord.healthy)
+            coord.exec_cache.get_or_build(key, object)
+        des = MultiplexSim(plan, self.mcfg, self.interference,
+                           monitor=QoSMonitor()).run(iterations=8)
+        fg_rate = plan.speedup / max(pred.fg_slowdown, 1e-30)
+        # exact per-chunk bg busy from the schedule rows (per-tenant rows
+        # only carry the max chunk width, which overstates multi-gap work)
+        busy: Dict[int, float] = {}
+        for _si, slot, _pos, (cs, ce), nsteps, bg_t in (
+                col._schedule_detail(k) if k > 0 else []):
+            eff = min(1.0, bg_t / self.mcfg.bg_step_time) ** 0.25
+            busy[slot] = busy.get(slot, 0.0) + nsteps * bg_t * (ce - cs) * eff
+        bg_rate = 0.0
+        job_rates: Dict[str, float] = {}
+        for slot, t in enumerate(pred.tenants[:k]):
+            rate = busy.get(slot, 0.0) / max(pred.fg_iter_time, 1e-30)
+            bg_rate += rate
+            job_rates[t.job] = rate / max(t.weight, 1e-30)
+        job_rates[self.fg_job] = fg_rate
+        return {
+            "n_healthy": len(coord.healthy),
+            "plan_gpus": plan.num_gpus,
+            "n_tenants": len(roster),
+            "n_admitted": k,
+            "fg_slowdown": pred.fg_slowdown,
+            "sim_fg_slowdown": des.fg_slowdown,
+            "fg_rate": fg_rate,
+            "bg_rate": bg_rate,
+            "jain": pred.jain_index,
+            "job_rates": job_rates,
+        }
+
+    def _integrate(self, epoch: dict, t0: float, t1: float,
+                   per_job: Dict[str, float]) -> Segment:
+        dt = t1 - t0
+        for job, rate in epoch["job_rates"].items():
+            per_job[job] = per_job.get(job, 0.0) + rate * dt
+        return Segment(
+            t0=t0, t1=t1,
+            n_healthy=epoch["n_healthy"],
+            plan_gpus=epoch["plan_gpus"],
+            n_tenants=epoch["n_tenants"],
+            n_admitted=epoch["n_admitted"],
+            fg_slowdown=epoch["fg_slowdown"],
+            sim_fg_slowdown=epoch["sim_fg_slowdown"],
+            fg_rate=epoch["fg_rate"],
+            bg_rate=epoch["bg_rate"],
+            jain=epoch["jain"],
+        )
+
+
+def _jain(xs: List[float]) -> float:
+    xs = [x for x in xs if x > 0]
+    if not xs:
+        return 1.0
+    return sum(xs) ** 2 / (len(xs) * sum(x * x for x in xs))

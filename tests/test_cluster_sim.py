@@ -1,0 +1,161 @@
+"""Trace-driven cluster simulator (repro.sim): determinism + failure storms.
+
+Pins the ISSUE 6 tentpole invariants:
+  * seeded trace generation -> simulate -> serialize -> load -> re-simulate
+    is bit-identical (reports compare equal as JSON, segments included),
+  * a 25%-device-loss failure storm keeps the ExecutableCache bounded
+    (evict_stale after every re-plan) and no predicted collocation chunk
+    ever references a dead device,
+  * trace JSON round-trips exactly and rejects unknown versions/kinds,
+  * the admission sweep inside the replay enforces the QoS bound under a
+    pessimistic interference model (tenants actually get rejected).
+"""
+import json
+
+import pytest
+
+from repro.configs.vgg16 import CONFIG as VCFG
+from repro.core.costmodel import A100
+from repro.core.multiplex import InterferenceModel
+from repro.models.graph import build_vgg_graph
+from repro.sim import (
+    ClusterSim,
+    Trace,
+    TraceEvent,
+    generate_failure_storm,
+    generate_trace,
+    load_trace,
+    save_trace,
+)
+
+GRAPH = build_vgg_graph(VCFG, 32)
+AMP = 1.5
+
+
+def _sim(trace, **kw):
+    kw.setdefault("interference", InterferenceModel(gap_inflation=1.12))
+    return ClusterSim(trace, GRAPH, hw=A100, amp_limit=AMP, **kw)
+
+
+def test_trace_generation_is_seed_deterministic():
+    a = generate_trace(64, seed=3, horizon=120.0)
+    b = generate_trace(64, seed=3, horizon=120.0)
+    assert a.to_json() == b.to_json()
+    c = generate_trace(64, seed=4, horizon=120.0)
+    assert a.to_json() != c.to_json()
+    # sorted by time, all kinds well-formed, devices in range
+    ts = [e.t for e in a.events]
+    assert ts == sorted(ts)
+    for e in a.events:
+        if e.device is not None:
+            assert 0 <= e.device < 64
+
+
+def test_trace_json_roundtrip(tmp_path):
+    tr = generate_trace(32, seed=9, horizon=90.0)
+    p = tmp_path / "t.json"
+    save_trace(tr, p)
+    back = load_trace(p)
+    assert back.to_json() == tr.to_json()
+    # version/kind validation
+    bad = tr.to_json()
+    bad["version"] = 2
+    with pytest.raises(ValueError):
+        Trace.from_json(bad)
+    with pytest.raises(ValueError):
+        TraceEvent.from_json({"t": 0.0, "kind": "meteor_strike"})
+
+
+def test_replay_is_bit_identical_across_serialization(tmp_path):
+    """generate -> simulate, then save -> load -> re-simulate: the two
+    reports (segments included) serialize identically."""
+    tr = generate_trace(64, seed=7, horizon=150.0)
+    rep1 = _sim(tr).run()
+    p = tmp_path / "trace.json"
+    save_trace(tr, p)
+    rep2 = _sim(load_trace(p)).run()
+    assert rep1.to_json(with_segments=True) == rep2.to_json(with_segments=True)
+    # and the report itself survives a JSON round-trip (no NaN/inf floats)
+    assert json.loads(json.dumps(rep1.to_json(with_segments=True))) == \
+        rep1.to_json(with_segments=True)
+
+
+def test_replay_tracks_cluster_state():
+    tr = generate_trace(64, seed=7, horizon=150.0)
+    rep = _sim(tr).run()
+    assert rep.n_epochs >= 1 and rep.n_events == len(tr.events)
+    assert rep.horizon == tr.horizon
+    # every failure/join that changed the pool re-planned the foreground
+    assert rep.n_replans >= 1
+    assert rep.fg_goodput > 0.0
+    assert 0.0 < rep.jain_time_avg <= 1.0 + 1e-12
+    assert rep.mean_fg_slowdown >= 1.0 - 1e-9
+    # segments tile [0, horizon) without gaps
+    segs = rep.segments
+    assert segs[0].t0 == 0.0 and segs[-1].t1 == pytest.approx(rep.horizon)
+    for a, b in zip(segs, segs[1:]):
+        assert a.t1 == pytest.approx(b.t0)
+        assert a.plan_gpus == a.n_healthy  # exact-survivor planning
+
+
+def test_failure_storm_keeps_cache_bounded_and_plans_on_survivors():
+    """25% device loss: evict_stale drops every executable touching a dead
+    device, the LRU bound holds throughout, and every post-storm plan /
+    predicted chunk lives on surviving devices only (the chunk containment
+    assert inside ClusterSim._epoch runs on every epoch)."""
+    storm = generate_failure_storm(64, seed=11, dead_fraction=0.25)
+    n_failures = sum(1 for e in storm.events if e.kind == "device_failure")
+    assert n_failures >= 16  # a real storm
+    sim = _sim(storm)
+    rep = sim.run()
+    assert rep.n_replans == n_failures
+    assert rep.cache_final_size <= 64  # ExecutableCache.max_entries
+    assert rep.cache_evictions > 0    # the storm actually evicted
+    # final epoch plans exactly the surviving pool
+    assert rep.segments[-1].n_healthy == 64 - n_failures
+    assert rep.segments[-1].plan_gpus == 64 - n_failures
+
+
+def test_pessimistic_interference_rejects_tenants():
+    """Under heavy calibrated interference the admission sweep refuses
+    tenants (predicted fg slowdown above the 1.33x bound) — the sim's
+    fg slowdown stays within the bound it promised."""
+    ev = [TraceEvent(t=1.0 + i, kind="job_arrival", job=f"bg{i}",
+                     priority=1, weight=1.0, quantum=1) for i in range(4)]
+    tr = Trace(n_devices=32, events=ev, horizon=50.0)
+    rep = _sim(tr, interference=InterferenceModel(gap_inflation=2.0)).run()
+    assert rep.rejected_total > 0
+    assert rep.mean_fg_slowdown <= 1.33 + 1e-9
+
+
+def test_departures_shrink_roster_and_service_accrues_per_job():
+    ev = [
+        TraceEvent(t=1.0, kind="job_arrival", job="bgA", priority=1,
+                   weight=1.0, quantum=1),
+        TraceEvent(t=2.0, kind="job_arrival", job="bgB", priority=1,
+                   weight=1.0, quantum=1),
+        TraceEvent(t=30.0, kind="job_departure", job="bgA"),
+    ]
+    tr = Trace(n_devices=16, events=ev, horizon=60.0)
+    rep = _sim(tr).run()
+    assert set(rep.per_job_service) == {"fg", "bgA", "bgB"}
+    # bgB outlived bgA and accrued strictly more service
+    assert rep.per_job_service["bgB"] > rep.per_job_service["bgA"] > 0.0
+    assert rep.segments[-1].n_tenants == 1
+
+
+def test_committed_traces_replay_and_gate():
+    """The checked-in benchmark traces load, replay deterministically, and
+    the 128-device one beats the DP baseline (the bench gate's smallest
+    scale, kept fast enough for tier-1)."""
+    import os
+
+    from repro.core.planner import plan_data_parallel
+
+    path = os.path.join(os.path.dirname(__file__), "..", "benchmarks",
+                        "traces", "trace_128.json")
+    tr = load_trace(path)
+    assert tr.n_devices == 128
+    rep = _sim(tr).run()
+    dp = plan_data_parallel(GRAPH, 128, hw=A100)
+    assert rep.mean_goodput_rate > dp.speedup

@@ -272,7 +272,9 @@ def test_largest_pow2_mesh_non_pow2_counts():
 
     from repro.launch.mesh import largest_pow2_mesh, mesh_axis_sizes
 
-    for n, want in ((8, 8), (7, 4), (6, 4), (5, 4), (3, 2), (2, 2), (1, 1)):
+    # non-pow2 survivor counts keep every device a pow2 model width allows
+    # (7 -> 7x1, 6 -> 3x2, 5 -> 5x1), instead of rounding down to pow2_floor
+    for n, want in ((8, 8), (7, 7), (6, 6), (5, 5), (3, 3), (2, 2), (1, 1)):
         mesh = largest_pow2_mesh(n, devices=jax.devices()[:n])
         sizes = mesh_axis_sizes(mesh)
         assert sizes["data"] * sizes["model"] == want, (n, sizes)

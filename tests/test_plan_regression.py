@@ -131,21 +131,42 @@ def test_golden_encdec_cross_edge_plan():
 
 
 def test_coordinator_failure_join_roundtrip():
-    """handle_failure re-plans at the next power of two; handle_join
-    restores the original plan exactly."""
+    """handle_failure re-plans onto the exact surviving pool (non-pow2 scale
+    set, no rounding down to pow2_floor); handle_join restores the original
+    plan exactly."""
     coord = ClusterCoordinator(16)
     job = Job("fg", "foreground", GRAPHS["llama3-8b"](), amp_limit=AMP_LIMIT)
     p16 = coord.submit_foreground(job)
     assert p16.num_gpus == 16
 
-    p8 = coord.handle_failure(0)  # 15 healthy -> pow2 subset = 8
-    assert p8.num_gpus == 8
-    assert p8.total_time >= p16.total_time - 1e-12
+    p15 = coord.handle_failure(0)  # 15 healthy -> plan all 15 survivors
+    assert p15.num_gpus == 15
+    assert p15.total_time >= p16.total_time - 1e-12
 
     p16b = coord.handle_join([16])  # back to 16 healthy
     assert p16b.num_gpus == 16
     assert p16b.total_time == pytest.approx(p16.total_time, rel=0, abs=0)
     assert [l.gpus for l in p16b.layers] == [l.gpus for l in p16.layers]
+
+
+def test_non_pow2_pool_plans_most_survivors():
+    """ISSUE 6 regression: a 7-device pool (one failure on 8) must plan at
+    7 devices with the peak layer on >= 6 of them — not round down to a
+    4-device pow2 subset that discards ~half the survivors."""
+    from repro.configs.vgg16 import CONFIG as VCFG
+    from repro.models.graph import build_vgg_graph
+
+    coord = ClusterCoordinator(8, hw=A100)
+    job = Job("fg", "foreground", build_vgg_graph(VCFG, 32), amp_limit=1.5)
+    p8 = coord.submit_foreground(job)
+    assert p8.num_gpus == 8
+    p7 = coord.handle_failure(7)
+    assert p7.num_gpus == 7
+    assert max(l.gpus for l in p7.layers) >= 6
+    # both planner engines agree on the extended (non-pow2) scale set
+    ref = plan(build_vgg_graph(VCFG, 32), 7, amp_limit=1.5, hw=A100,
+               engine="reference")
+    assert [l.gpus for l in ref.layers] == [l.gpus for l in p7.layers]
 
 
 def test_train_loop_reports_replan_through_coordinator():
@@ -175,4 +196,4 @@ def test_train_loop_reports_replan_through_coordinator():
     assert report.mitigations.count("failure") == 1
     assert report.mitigations.count("replan") == 1
     assert 3 not in coord.healthy
-    assert coord.foreground().plan.num_gpus == 8  # 15 healthy -> pow2 = 8
+    assert coord.foreground().plan.num_gpus == 15  # 15 healthy -> plan 15

@@ -269,3 +269,80 @@ def test_equal_priority_rotation_starvation_bound(plan, n, rounds_per_tenant):
             assert ran[slot] >= bound, (ran, sched)
         # and the guard's purpose: nobody is pinned at zero while peers run
         assert all(s > 0 for s in steps), steps
+
+
+def _gap_plan(num_gpus=8, fg=4, gap_ms=40.0):
+    """One wide gap: [fg, num_gpus) free for gap_ms during stage 1."""
+    mk = lambda i, g, t: LayerPlan(index=i, name=f"l{i}", gpus=g, time=t,
+                                   comp=t, sync=0.0, comm_in=0.0, amp=1.0)
+    return BurstPlan(
+        layers=(mk(0, num_gpus, 1e-3), mk(1, fg, gap_ms * 1e-3),
+                mk(2, num_gpus, 1e-3)),
+        num_gpus=num_gpus, amp_limit=2.0,
+        single_gpu_time=(2 + gap_ms) * 1e-3,
+    )
+
+
+def test_deficit_sizes_wider_chunk_for_lagging_tenant():
+    """ISSUE 6 satellite: per-tenant deficit feeds pack_ranges share sizing,
+    so a persistently-behind tenant claims a WIDER chunk — not merely a
+    rotation into the same equal-split chunk."""
+    from repro.core.multiplex import BgTenant, Collocator, MultiplexConfig
+
+    plan = _gap_plan(num_gpus=8, fg=4)  # stage 1 free: (4, 8), 4 devices
+    tenants = [BgTenant(f"t{i}", priority=1, step_fn_factory=lambda m: None)
+               for i in range(2)]
+    col = Collocator(plan, MultiplexConfig(max_inflight=4, use_feedback=False),
+                     tenants=tenants)
+    # equal deficits: the equal split gives both tenants 2 devices
+    base = {r[1]: r[3] for r in col._schedule_detail(iteration=0)}
+    assert all(ce - cs == 2 for cs, ce in base.values()), base
+    # slot 1 falls far behind (several service units owed)
+    col._deficits[1] = 10.0 * col.bg_step_quantum
+    rows = {r[1]: r[3] for r in col._schedule_detail(iteration=0)}
+    lag_w = rows[1][1] - rows[1][0]
+    peer_w = rows[0][1] - rows[0][0]
+    assert lag_w > 2, rows       # wider than its equal-split chunk
+    assert lag_w > peer_w, rows  # and wider than the non-lagging peer's
+    # chunks stay disjoint and quantum-aligned inside the gap's free range
+    (s1, e1), (s0, e0) = rows[1], rows[0]
+    assert 4 <= min(s0, s1) and max(e0, e1) <= 8 and (e1 <= s0 or e0 <= s1)
+
+
+def test_deficit_sizing_tightens_starvation_bound():
+    """N-iteration rotation property, tightened: after a tenant is starved
+    for k rounds, deficit share-sizing gives it MORE cumulative device-
+    seconds over the catch-up rounds than the deficit-blind equal split
+    would (the old scheduler rotated it into the same-size chunk forever)."""
+    from repro.core.multiplex import BgTenant, Collocator, MultiplexConfig
+
+    def catchup_devsec(feed_deficit: bool) -> float:
+        plan = _gap_plan(num_gpus=8, fg=4)
+        tenants = [BgTenant(f"t{i}", priority=1,
+                            step_fn_factory=lambda m: None)
+                   for i in range(2)]
+        col = Collocator(plan,
+                         MultiplexConfig(max_inflight=4, use_feedback=False),
+                         tenants=tenants)
+        # starve slot 1 for 3 rounds (its launches never happen)
+        for _ in range(3):
+            rows = col._schedule_detail()
+            launched = [0, 0]
+            for _si, slot, _pos, _c, nsteps, _t in rows:
+                if slot == 0:
+                    launched[0] += nsteps
+            if not feed_deficit:
+                # deficit-blind control: the scheduler never learns
+                launched[1] = launched[0]
+            col.note_launched(launched)
+        # catch-up rounds: device-seconds slot 1 actually gets
+        got = 0.0
+        for _ in range(2):
+            for _si, slot, _pos, (cs, ce), nsteps, bg_t in \
+                    col._schedule_detail():
+                if slot == 1:
+                    got += nsteps * bg_t * (ce - cs)
+            col.note_launched([0, 0])
+        return got
+
+    assert catchup_devsec(True) > catchup_devsec(False)

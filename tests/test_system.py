@@ -69,11 +69,12 @@ def test_coordinator_elastic_replan():
               amp_limit=2.0)
     p16 = coord.submit_foreground(job)
     assert p16.num_gpus == 16
-    p8 = coord.handle_failure(0)  # 15 healthy -> pow2 subset = 8
-    assert p8.num_gpus == 8
-    assert p8.total_time >= p16.total_time - 1e-12
-    p16b = coord.handle_join([16, 17])  # 17 healthy -> 16
-    assert p16b.num_gpus == 16
+    p15 = coord.handle_failure(0)  # 15 healthy -> plan all 15 survivors
+    assert p15.num_gpus == 15
+    assert p15.total_time >= p16.total_time - 1e-12
+    p17 = coord.handle_join([16, 17])  # 17 healthy -> plan all 17
+    assert p17.num_gpus == 17
+    assert p17.total_time <= p15.total_time + 1e-12
 
 
 def test_coordinator_collocation_sim():
