@@ -15,7 +15,14 @@ Gates:
   * time-averaged fg slowdown stays within the 1.33x QoS bound that the
     admission sweep promises,
   * replay is deterministic: each trace simulated twice gives bit-identical
-    reports, and the executable cache stays within its LRU bound.
+    reports, and the executable cache stays within its LRU bound,
+  * the heartbeat-loss trace replays through the LIVE consumption path
+    (CoordinatorLoop.pump over InProcessBus): every silenced device is
+    *detected* from missing beats — deterministic mitigation counts, one
+    re-plan per loss, final pool exactly ``n - n_losses``,
+  * the density-aware interference model makes per-epoch admission reject
+    the MARGINAL tenant: with a positive density slope the sweep admits
+    some 0 < k < n of the roster instead of all-or-nothing.
 
 The interference model is calibrated from measured collocation records
 (BENCH_cluster_throughput.json) when available, so the simulated admission
@@ -38,7 +45,12 @@ from repro.core.costmodel import A100
 from repro.core.multiplex import InterferenceModel
 from repro.core.planner import plan_data_parallel
 from repro.models.graph import build_vgg_graph
-from repro.sim import ClusterSim, generate_trace, load_trace
+from repro.sim import (
+    ClusterSim,
+    generate_heartbeat_loss,
+    generate_trace,
+    load_trace,
+)
 
 BENCH_FILE = os.path.join(os.path.dirname(__file__), "..",
                           "BENCH_cluster_sim.json")
@@ -143,6 +155,10 @@ def smoke(record: bool) -> int:
             "deterministic": deterministic,
             "beats_dp": beats_dp,
         })
+    hb = _heartbeat_loss_gate(graph, imodel)
+    ok &= hb["gate_ok"]
+    density = _density_admission_gate(graph)
+    ok &= density["gate_ok"]
     print(f"cluster-sim smoke: {'OK' if ok else 'FAIL'}")
     if record:
         from _bench_util import append_record, git_sha, utc_now_iso
@@ -158,9 +174,94 @@ def smoke(record: bool) -> int:
                 "gap_inflation": imodel.gap_inflation,
             },
             "curve": curve,
+            "heartbeat_loss": hb,
+            "density_admission": density,
             "gate_ok": bool(ok),
         })
     return 0 if ok else 1
+
+
+def _heartbeat_loss_gate(graph, imodel) -> dict:
+    """Replay the heartbeat-loss trace through the live detection path and
+    gate deterministic mitigation counts: every silenced device must be
+    detected from missing beats (never announced), each detection re-plans
+    the foreground onto the exact surviving pool, and a second replay is
+    bit-identical."""
+    path = os.path.join(TRACE_DIR, "heartbeat_loss_128.json")
+    if os.path.exists(path):
+        trace, src = load_trace(path), os.path.basename(path)
+    else:
+        trace = generate_heartbeat_loss(128, seed=13, n_losses=3, n_jobs=2)
+        src = "generated"
+    n_losses = sum(1 for e in trace.events if e.kind == "heartbeat_loss")
+
+    def replay():
+        return ClusterSim(trace, graph, hw=A100, amp_limit=AMP_LIMIT,
+                          interference=imodel,
+                          qos_bound=QOS_SLOWDOWN_BOUND).run()
+
+    rep, rep2 = replay(), replay()
+    deterministic = (rep.to_json(with_segments=True)
+                     == rep2.to_json(with_segments=True))
+    detected = rep.mitigations.get("failure_detected", 0)
+    replans = rep.mitigations.get("replan", 0)
+    final = rep.segments[-1]
+    gate = (deterministic
+            and detected == n_losses
+            and replans == n_losses
+            and rep.n_replans == n_losses
+            and final.n_healthy == trace.n_devices - n_losses
+            and final.plan_gpus == trace.n_devices - n_losses
+            and rep.mean_fg_slowdown <= QOS_SLOWDOWN_BOUND + 1e-9)
+    print(
+        f"heartbeat-loss trace={src} losses={n_losses} "
+        f"detected={detected} replans={replans} "
+        f"final_pool={final.n_healthy}/{trace.n_devices} "
+        f"fg_slow={rep.mean_fg_slowdown:.3f} det={deterministic} "
+        f"gate={'OK' if gate else 'FAIL'}"
+    )
+    return {
+        "trace": src,
+        "n_losses": n_losses,
+        "failure_detected": detected,
+        "replans": replans,
+        "final_healthy": final.n_healthy,
+        "final_plan_gpus": final.plan_gpus,
+        "mean_fg_slowdown": rep.mean_fg_slowdown,
+        "deterministic": deterministic,
+        "gate_ok": bool(gate),
+    }
+
+
+def _density_admission_gate(graph) -> dict:
+    """Gate marginal (not all-or-nothing) admission: under a density-aware
+    interference model the per-epoch re-sweep must admit a strict subset
+    0 < k < n of a 4-tenant roster — each extra collocated tenant inflates
+    the shared gap stages a bit more, so the feasible prefix ends before
+    the roster does."""
+    from repro.core.coordinator import ClusterCoordinator, Job
+
+    coord = ClusterCoordinator(8, virtual_devices=True)
+    coord.submit_foreground(Job("fg", "foreground", graph, amp_limit=1.5))
+    for i in range(4):
+        coord.submit_background(
+            Job(f"bg{i}", "background", [], priority=4 - i)
+        )
+    coord.interference = InterferenceModel(gap_inflation=1.15,
+                                           density_slope=2.0)
+    decision = coord.readmit(QOS_SLOWDOWN_BOUND)
+    k = decision.n_admitted if decision else -1
+    gate = decision is not None and 0 < k < 4
+    print(f"density admission roster=4 admitted={k} "
+          f"({decision.row() if decision else 'no decision'}) "
+          f"gate={'OK' if gate else 'FAIL'}")
+    return {
+        "roster": 4,
+        "n_admitted": k,
+        "density_slope": 2.0,
+        "gap_inflation": 1.15,
+        "gate_ok": bool(gate),
+    }
 
 
 def main() -> int:

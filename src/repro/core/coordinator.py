@@ -32,6 +32,13 @@ from repro.core.planner import plan as make_plan
 QOS_SLOWDOWN_BOUND = 1.33
 
 
+def _placeholder_factory(mesh):
+    """Stand-in step factory for prediction-only admission sweeps: rosters
+    jobs registered without a ``step_fn_factory`` so ``readmit`` can reason
+    about them analytically; never compiled or called."""
+    return lambda: None
+
+
 @dataclass
 class Job:
     name: str
@@ -167,9 +174,19 @@ class ClusterCoordinator:
         return fg.plan
 
     def handle_join(self, device_ids) -> Optional[BurstPlan]:
-        """Elastic scale-up: devices join, re-plan to exploit them."""
-        self.healthy.update(device_ids)
-        self.events.append(ClusterEvent(self._clock(), "join", f"+{len(device_ids)}"))
+        """Elastic scale-up: devices join, re-plan to exploit them.
+
+        Idempotent: a join announcement covering only already-healthy
+        devices (re-delivered heartbeat, duplicate trace event) changes
+        nothing — no join event is logged and no spurious re-plan runs.
+        Returns the new plan, or None when the healthy set is unchanged
+        or no foreground job is running.
+        """
+        new = set(device_ids) - self.healthy
+        if not new:
+            return None
+        self.healthy.update(new)
+        self.events.append(ClusterEvent(self._clock(), "join", f"+{len(new)}"))
         self._evict_stale_executables()
         fg = self.foreground()
         if fg is None:
@@ -192,6 +209,49 @@ class ClusterCoordinator:
         job.status = "done"
         self.events.append(ClusterEvent(self._clock(), "departure", name))
         return True
+
+    def readmit(self, admission_bound: float = QOS_SLOWDOWN_BOUND, *,
+                reason: str = "epoch") -> Optional[AdmissionDecision]:
+        """Continuous admission: re-sweep the current tenant roster against
+        the current plan (prediction only — nothing compiles).
+
+        The live control plane calls this each epoch and on every churn
+        event (``CoordinatorLoop``), instead of admission running once at
+        submesh-carving time: after a failure shrinks the gaps, or a tenant
+        arrives/departs, the argmax-cluster-throughput sweep re-decides
+        which prefix of the roster stays under the QoS bound.  With the
+        density-aware ``InterferenceModel`` the sweep rejects the
+        *marginal* tenant — each extra collocated tenant inflates the gap
+        stages a bit more, so the curve peaks at some 0 < k < n instead of
+        all-or-nothing.
+
+        The sweep predicts against a fresh ``QoSMonitor`` (stale feedback
+        bans from a previous operating point must not leak into the
+        decision) and uses placeholder factories for rostered jobs so
+        prediction works with or without compiled steps.  Logs an
+        'admission' ClusterEvent only when the admitted set *changed* since
+        the previous decision (churn is the signal; a stable roster
+        re-admitted every epoch stays silent).  Returns the decision, or
+        None when there is no planned foreground job or no tenants.
+        """
+        fg = self.foreground()
+        if fg is None or fg.plan is None:
+            return None
+        tenants = self.background_tenants(_placeholder_factory)
+        if not tenants:
+            return None
+        col = Collocator(fg.plan, self._last_mcfg, monitor=QoSMonitor(),
+                         tenants=tenants, interference=self.interference)
+        decision = col.admit(max_fg_slowdown=admission_bound)
+        prev = self.last_admission
+        prev_set = tuple(t.job for t in prev.admitted) if prev else None
+        now_set = tuple(t.job for t in decision.admitted)
+        if prev_set != now_set:
+            self.events.append(ClusterEvent(
+                self._clock(), "admission", f"{reason}: {decision.row()}"
+            ))
+        self.last_admission = decision
+        return decision
 
     def _drop_stale_measurements(self, old: Optional[BurstPlan],
                                  new: Optional[BurstPlan]) -> None:

@@ -152,6 +152,18 @@ class InterferenceModel:
     stages without a per-stage fit.  Every fitted multiplier is clamped to
     >= 1.0 — a noisy host can measure a sub-1.0 slowdown, but interference
     never *speeds up* the foreground.
+
+    ``density_slope`` makes the model *tenant-density aware*: the fitted
+    multipliers describe interference at one collocated tenant per gap
+    stage (density 1), and a stage shared by ``d`` tenants inflates its
+    excess linearly — ``gap_inflation_at(si, d)`` returns
+    ``1 + (base-1) * (1 + density_slope*(d-1))``.  Host-side dispatch
+    contention and interconnect pressure scale with how many tenants pile
+    into a gap, so the admission sweep's predicted slowdown becomes
+    monotone in roster size and ``Collocator.admit`` can reject the
+    *marginal* tenant (0 < k < n) instead of all-or-nothing.  The default
+    0.0 is density-blind (every prior behavior unchanged); ``calibrate``
+    fits it from measurements taken at different densities.
     """
 
     naive_inflation: float = 1.9
@@ -161,14 +173,28 @@ class InterferenceModel:
     sensitive_kinds: tuple = ("sync", "allreduce")
     gap_inflation: float = 1.0  # submesh mode; calibrated from measurement
     gap_inflation_stages: Tuple[Tuple[int, float], ...] = ()  # per-stage fit
+    density_slope: float = 0.0  # per-extra-tenant excess growth; fitted
 
     def gap_inflation_for(self, stage_index: int) -> float:
-        """Submesh-mode fg multiplier for one gap stage (per-stage fit when
-        available, else the scalar ``gap_inflation``)."""
+        """Submesh-mode fg multiplier for one gap stage at density 1
+        (per-stage fit when available, else the scalar ``gap_inflation``)."""
         for si, v in self.gap_inflation_stages:
             if si == stage_index:
                 return v
         return self.gap_inflation
+
+    def density_factor(self, density: float) -> float:
+        """Excess-inflation multiplier for ``density`` collocated tenants
+        sharing one gap stage (1.0 at density <= 1 or with no fitted slope)."""
+        if density <= 1.0 or self.density_slope <= 0.0:
+            return 1.0
+        return 1.0 + self.density_slope * (density - 1.0)
+
+    def gap_inflation_at(self, stage_index: int, density: float = 1.0) -> float:
+        """Submesh-mode fg multiplier for one gap stage shared by
+        ``density`` tenants."""
+        base = self.gap_inflation_for(stage_index)
+        return 1.0 + (base - 1.0) * self.density_factor(density)
 
     def fg_multiplier(self, *, priorities: bool, pacing: bool, sensitive: bool,
                       banned: bool) -> float:
@@ -895,6 +921,11 @@ class Collocator:
 
     # -- calibration + analytic prediction ---------------------------------
 
+    def _current_densities(self, bg_model: int = 1) -> Dict[int, float]:
+        """Per-stage tenant density of the current schedule (distinct
+        tenant slots packed into each collocated gap stage)."""
+        return _stage_densities(self._schedule_detail(None, bg_model))
+
     def calibrate(self, results: Sequence[CollocationResult]) -> InterferenceModel:
         """Fit the interference model's submesh-mode multipliers from
         measured ``CollocationResult``s.
@@ -916,21 +947,50 @@ class Collocator:
         rescaled to the *residual* excess only, so partial stage coverage
         never double-counts the measured slowdown.
 
+        Density fit (when results span *different* tenant densities): the
+        measured excess slowdowns ``(s_r - 1)`` are regressed against each
+        result's mean collocated density ``d_r`` under the linear model
+        ``s - 1 = c * (1 + slope*(d-1))`` — an ordinary least-squares line
+        ``y = b0 + b1*x`` over ``(d_r - 1, s_r - 1)`` gives
+        ``density_slope = b1/b0``, clamped to [0, 10] and kept only when
+        both coefficients are positive (interference grows with density or
+        the fit is noise).  Results at a single density keep the prior
+        slope — one operating point cannot identify it.  The scalar and
+        per-stage inversions below then divide out the *current* schedule's
+        per-stage density, so the stored multipliers are density-1 bases
+        and ``predict()``'s ``gap_inflation_at`` reproduces ``s`` exactly
+        at the calibration density.
+
         Every fitted multiplier (scalar and per-stage) is clamped to >= 1.0:
         on a noisy host a measured slowdown below 1.0 would otherwise fit a
         sub-1.0 multiplier and make ``predict()``/``MultiplexSim`` forecast
         that interference *speeds up* the foreground.  Installs the fitted
         model on this collocator's sim and returns it.
         """
-        meas = [max(float(r.fg_slowdown), 1.0) for r in results
-                if r.iterations > 0 and r.fg_slowdown > 0.0]
+        measured = [r for r in results
+                    if r.iterations > 0 and r.fg_slowdown > 0.0]
+        meas = [max(float(r.fg_slowdown), 1.0) for r in measured]
         if not meas:
             return self.interference
         log_mean = sum(math.log(s) for s in meas) / len(meas)
         s = math.exp(log_mean)
+        slope = _fit_density_slope(measured, self.interference.density_slope)
         stages = self.plan.stages()
-        col_stages = {si for si, _, _ in self.schedule_tenants()}
-        gap_t = sum(stages[si].duration for si in col_stages)
+        detail = self._schedule_detail()
+        cur_density = _stage_densities(detail)
+        col_stages = set(cur_density)
+
+        def dfac(si: int) -> float:
+            d = cur_density.get(si, 1.0)
+            if d <= 1.0 or slope <= 0.0:
+                return 1.0
+            return 1.0 + slope * (d - 1.0)
+
+        # density-weighted gap time: the inversion divides the measured
+        # excess across collocated stages in proportion to how much each
+        # stage's density amplifies its base multiplier, so the stored base
+        # is density-1 and predict() at the calibration density round-trips
+        gap_t = sum(stages[si].duration * dfac(si) for si in col_stages)
         total = self.plan.total_time
         if gap_t <= 0.0 or total <= 0.0:
             gi = 1.0
@@ -963,20 +1023,24 @@ class Collocator:
             # explain only the residual excess — otherwise the aggregate is
             # double-counted and admission over-rejects
             unfitted_excess = sum(
-                stages[si].duration * (gi - 1.0)
+                stages[si].duration * (gi - 1.0) * dfac(si)
                 for si in col_stages if si not in fitted
             )
             want = max(0.0, (s - 1.0) * total - unfitted_excess)
             if excess > 0.0 and want > 0.0:
                 alpha = want / excess
+                # the measured per-stage slowdowns are *effective* values at
+                # the calibration density; store the density-1 base so
+                # gap_inflation_at reproduces the effective value exactly
                 stage_vec = tuple(sorted(
-                    (si, max(1.0, 1.0 + (fitted[si] - 1.0) * alpha))
+                    (si, max(1.0, 1.0 + (fitted[si] - 1.0) * alpha / dfac(si)))
                     for si in fitted
                 ))
             # excess == 0 (stage noise hid all inflation) -> no per-stage
             # shape to keep; fall back to the scalar inversion alone
         model = _dc_replace(self.interference, gap_inflation=gi,
-                            gap_inflation_stages=stage_vec)
+                            gap_inflation_stages=stage_vec,
+                            density_slope=slope)
         self.interference = model
         self._sim.imodel = model
         return model
@@ -988,23 +1052,27 @@ class Collocator:
 
         Replays the tenant schedule through the calibrated multipliers:
         every collocated gap stage inflates by its per-stage
-        ``gap_inflation_for`` (the fitted vector where available, the scalar
-        elsewhere), every packed tenant contributes its paced step count,
-        and ``cluster_throughput`` — the admission objective — is
-        (fg busy + bg busy) device-seconds over the inflated iteration,
-        with bg busy estimated from each tenant's own step-time quantum and
-        chunk width.  ``n_tenants=0`` is the fg-only operating point.
-        ``iterations == 0`` marks the result as predicted, not measured.
+        ``gap_inflation_at`` — the fitted per-stage base (vector where
+        available, scalar elsewhere) scaled by the stage's *tenant density*
+        (how many distinct tenants pack into that gap this iteration, via
+        the fitted ``density_slope``) — every packed tenant contributes its
+        paced step count, and ``cluster_throughput`` — the admission
+        objective — is (fg busy + bg busy) device-seconds over the inflated
+        iteration, with bg busy estimated from each tenant's own step-time
+        quantum and chunk width.  ``n_tenants=0`` is the fg-only operating
+        point.  ``iterations == 0`` marks the result as predicted, not
+        measured.
         """
         n = n_tenants if n_tenants is not None else max(1, len(self.tenants))
         n = max(0, n)
         detail = self._schedule_detail(n, bg_model) if n > 0 else []
         stages = self.plan.stages()
         fg_iso = self.plan.total_time
-        col_stages = {si for si, _, _, _, _, _ in detail}
+        density = _stage_densities(detail)
         fg_col = fg_iso + sum(
-            stages[si].duration * (self.interference.gap_inflation_for(si) - 1.0)
-            for si in col_stages
+            stages[si].duration
+            * (self.interference.gap_inflation_at(si, d) - 1.0)
+            for si, d in density.items()
         )
         per_slot: Dict[int, int] = defaultdict(int)
         slot_stages: Dict[int, List[int]] = defaultdict(list)
@@ -1488,6 +1556,57 @@ class Collocator:
         for f in inflight:
             f()
         return {"iter_time": time_fn() - t_start}
+
+
+def _stage_densities(detail) -> Dict[int, float]:
+    """Per-stage tenant density from ``_schedule_detail`` rows: the number
+    of distinct tenant slots launching steps inside each gap stage."""
+    slots: Dict[int, set] = defaultdict(set)
+    for si, slot, _pos, _chunk, nsteps, _t in detail:
+        if nsteps > 0:
+            slots[si].add(slot)
+    return {si: float(len(s)) for si, s in slots.items()}
+
+
+def _result_density(r: "CollocationResult") -> float:
+    """Mean collocated-tenant density of a measured result: for each gap
+    stage any tenant occupied, how many active tenants shared it, averaged
+    over stages.  1.0 when the result carries no per-tenant rows (a
+    single-tenant measurement)."""
+    occupancy: Dict[int, int] = defaultdict(int)
+    for t in r.tenants:
+        if t.bg_steps_per_iter > 0:
+            for si in t.gap_stages:
+                occupancy[si] += 1
+    if not occupancy:
+        return 1.0
+    return sum(occupancy.values()) / len(occupancy)
+
+
+def _fit_density_slope(measured, prior: float) -> float:
+    """OLS fit of ``density_slope`` from measured results at different
+    tenant densities: under ``s - 1 = c * (1 + slope*(d-1))`` the line
+    ``y = b0 + b1*x`` over points ``(d_r - 1, s_r - 1)`` has
+    ``slope = b1/b0``.  Needs >= 2 distinct densities to identify the
+    slope (else keeps ``prior``); negative or degenerate fits (interference
+    shrinking with density = measurement noise) fall back to 0; clamped to
+    [0, 10] so one noisy pair can't make admission reject everything."""
+    pts = [(max(_result_density(r), 1.0) - 1.0,
+            max(float(r.fg_slowdown), 1.0) - 1.0) for r in measured]
+    if len({round(x, 9) for x, _ in pts}) < 2:
+        return prior
+    n = float(len(pts))
+    mx = sum(x for x, _ in pts) / n
+    my = sum(y for _, y in pts) / n
+    sxx = sum((x - mx) ** 2 for x, _ in pts)
+    sxy = sum((x - mx) * (y - my) for x, y in pts)
+    if sxx <= 0.0:
+        return prior
+    b1 = sxy / sxx
+    b0 = my - b1 * mx
+    if b0 <= 1e-9 or b1 <= 0.0:
+        return 0.0
+    return min(10.0, b1 / b0)
 
 
 def _block(x):

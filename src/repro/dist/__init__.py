@@ -25,14 +25,45 @@ GSPMD layouts and keeps them healthy at runtime.  Public API:
     - ``group_count(axis)`` — shard count of a logical axis (MoE capacity).
 
 ``repro.dist.faults``
-    - ``StepTimer`` — EMA-deadline straggler-step detection.
+    - ``StepTimer`` — EMA-deadline straggler-step detection (over-deadline
+      samples excluded from the EMA so one slow step can't mask the next).
     - ``HeartbeatMonitor`` — per-worker timeout (failure) + step-lag
-      (straggler) classification with an injectable clock.
+      (straggler) classification with an injectable clock and explicit
+      ``join``/``forget`` membership semantics.
     - ``MitigationLog`` — append-only mitigation record; feeds
       ``ClusterCoordinator.handle_failure`` elastic re-planning.
+
+``repro.dist.transport``  (the live control plane)
+    Transport contract: ``publish(topic, payload) -> seq`` appends one
+    JSON-serializable dict to a per-topic append-only log;
+    ``poll(topic, since) -> [(seq, payload), ...]`` returns everything at
+    or after ``since`` in a deterministic per-topic total order, without
+    consuming (readers keep their own cursors).  Implementations:
+
+    - ``InProcessBus`` — reference implementation (tests + simulator).
+    - ``fake_transport_pair()`` — two endpoints over one bus with JSON
+      round-trip enforcement and ``disconnect()`` beat-loss injection
+      (the CI stand-in for multi-host).
+    - ``KVStoreTransport`` — multi-host, over the ``jax.distributed``
+      coordination-service KV store (injectable client for tests).
+
+    Protocol layer: ``WorkerClient`` (beat + poll_reconfig) and
+    ``CoordinatorLoop.pump()`` (beats -> HeartbeatMonitor -> live
+    ``handle_failure``/``handle_join`` -> reconfig events back out, plus
+    continuous-admission re-sweeps on churn).
 """
 from repro.dist import fsdp  # noqa: F401
 from repro.dist.faults import HeartbeatMonitor, MitigationLog, StepTimer  # noqa: F401
+from repro.dist.transport import (  # noqa: F401
+    HEARTBEAT_TOPIC,
+    RECONFIG_TOPIC,
+    CoordinatorLoop,
+    FakeTransportEndpoint,
+    InProcessBus,
+    KVStoreTransport,
+    WorkerClient,
+    fake_transport_pair,
+)
 from repro.dist.sharding import (  # noqa: F401
     RuleReport,
     batch_pspecs,

@@ -34,9 +34,13 @@ class StepTimer:
         self.n = 0
 
     def record(self, dt: float) -> None:
-        self.ema = dt if self.ema is None else (
-            (1 - self.ema_alpha) * self.ema + self.ema_alpha * dt
-        )
+        # Over-deadline (straggler) samples are excluded from the EMA:
+        # folding them in would inflate the deadline after one slow step
+        # and mask a persistently slow worker from then on.
+        if not self.is_straggler_step(dt):
+            self.ema = dt if self.ema is None else (
+                (1 - self.ema_alpha) * self.ema + self.ema_alpha * dt
+            )
         self.n += 1
 
     def deadline(self) -> Optional[float]:
@@ -69,7 +73,39 @@ class HeartbeatMonitor:
         }
 
     def beat(self, worker: int, step: int) -> None:
+        # Unknown worker ids must go through join(): silently accepting
+        # them grows `last` past n_workers with no join semantics and the
+        # coordinator never learns a device appeared.
+        if worker not in self.last:
+            raise KeyError(
+                f"beat from unknown worker {worker}; call join({worker}) first"
+            )
         self.last[worker] = (self.clock(), step)
+
+    def join(self, worker: int) -> bool:
+        """Register a worker (explicit join semantics).
+
+        Returns True if the worker was new; re-joining a tracked worker is
+        a no-op (False) so re-delivered join announcements are idempotent.
+        """
+        if worker in self.last:
+            return False
+        self.last[worker] = (self.clock(), 0)
+        self.n_workers = len(self.last)
+        return True
+
+    def forget(self, worker: int) -> bool:
+        """Stop tracking a worker (acknowledge a detected failure).
+
+        Without this, ``failed()`` re-reports the same dead worker every
+        poll; the consumption loop forgets each failure it acts on so
+        detection fires exactly once per loss.
+        """
+        if worker not in self.last:
+            return False
+        del self.last[worker]
+        self.n_workers = len(self.last)
+        return True
 
     def failed(self) -> List[int]:
         now = self.clock()

@@ -59,6 +59,75 @@ def _bg_submeshes(fg_devices: int, amp_limit: float, hw, cfg, n: int):
     return meshes + [None] * (n - len(meshes)), dropped
 
 
+def _register_bg_jobs(coord, archs, meshes):
+    """Register each --bg-arch as a background Job WITH its step factory.
+
+    The factory (not just the built step fn) goes through
+    ``Job.step_fn_factory`` — ``background_tenants()`` rosters only jobs
+    carrying a factory, so registering bare ``Job(..., [])`` shells (the
+    old behavior) made coordinator-driven ``collocate()``/admission
+    silently see zero tenants.  The factory's ``signature`` feeds the
+    executable-cache key, scoping compiled steps per (arch, batch, seed).
+
+    Tenants with a gap submesh use ``bg_step_factory`` directly; tenants
+    without one (mesh None) get a same-device jit fallback factory that
+    ignores the mesh argument but still carries a distinct signature.
+    Returns the per-tenant zero-arg bg step fns for the train loop's
+    paced slot, in CLI (priority) order.
+    """
+    import jax
+
+    from repro.configs import get_config
+    from repro.core.coordinator import Job
+
+    bg_fns = []
+    for i, (bg_arch, bg_mesh) in enumerate(zip(archs, meshes)):
+        if bg_mesh is not None:
+            # executable collocation: the bg step is jitted onto a gap
+            # submesh disjoint from the foreground training mesh; the
+            # step's global batch is sized to the tenant's own chunk
+            # width (per-device batch), not a one-size-fits-all quantum
+            from repro.train.step import bg_step_factory
+
+            factory = bg_step_factory(bg_arch, seq=32, seed=1 + i,
+                                      per_device_batch=2)
+            bg_fns.append(factory(bg_mesh))
+            ids = sorted(d.id for d in bg_mesh.devices.flat)
+            print(f"bg tenant {i} ({bg_arch}) on disjoint submesh "
+                  f"devices {ids} (batch 2/device)")
+        else:
+            from repro.models.api import get_model, make_batch
+            from repro.optim.optimizer import make_optimizer
+            from repro.train.state import init_state
+            from repro.train.step import make_train_step
+
+            bcfg = get_config(bg_arch).reduced()
+            bapi = get_model(bcfg)
+            bopt = make_optimizer(bcfg)
+            bstate = init_state(jax.random.PRNGKey(1 + i), bapi, bopt)
+            bstep = jax.jit(make_train_step(bapi, bopt))
+            bbatch = make_batch(jax.random.PRNGKey(2 + i), bcfg, 2, 32)
+            holder = {"state": bstate}
+
+            def same_device_fn(holder=holder, bstep=bstep, bbatch=bbatch):
+                holder["state"], _ = bstep(holder["state"], bbatch)
+
+            def factory(mesh, fn=same_device_fn):
+                return fn
+
+            factory.signature = f"{bg_arch}-samedev-b2-s32-r{1 + i}"
+            bg_fns.append(same_device_fn)
+            print(f"bg tenant {i} ({bg_arch}) same-device fallback")
+        # register the tenant with the coordinator (priority: CLI order,
+        # first --bg-arch highest) so collocate()/re-plans/admission
+        # actually roster it
+        coord.submit_background(
+            Job(f"bg{i}-{bg_arch}", "background", [],
+                priority=len(archs) - i, step_fn_factory=factory)
+        )
+    return bg_fns
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", required=True)
@@ -73,6 +142,12 @@ def main():
                     help="background tenant arch; repeat for multiple "
                          "tenants (first = highest priority)")
     ap.add_argument("--amp-limit", type=float, default=2.0)
+    ap.add_argument("--hb-timeout", type=float, default=10.0,
+                    help="heartbeat timeout (s) before a silent worker is "
+                         "declared failed by the live control plane")
+    ap.add_argument("--admit-every", type=int, default=5,
+                    help="re-sweep tenant admission every N steps "
+                         "(continuous admission; 0 disables)")
     args = ap.parse_args()
 
     import jax
@@ -114,45 +189,7 @@ def main():
                 f" chunk(s); dropped tenants fall back to same-device jit "
                 f"(they share the fg devices instead of a disjoint submesh)"
             )
-        bg_fns = []
-        for i, (bg_arch, bg_mesh) in enumerate(zip(archs, meshes)):
-            # register the tenant with the coordinator (priority: CLI order,
-            # first --bg-arch highest) so collocate()/re-plans see it
-            coord.submit_background(
-                Job(f"bg{i}-{bg_arch}", "background", [],
-                    priority=len(archs) - i)
-            )
-            if bg_mesh is not None:
-                # executable collocation: the bg step is jitted onto a gap
-                # submesh disjoint from the foreground training mesh; the
-                # step's global batch is sized to the tenant's own chunk
-                # width (per-device batch), not a one-size-fits-all quantum
-                from repro.train.step import bg_step_factory
-
-                bg_fns.append(bg_step_factory(bg_arch, seq=32, seed=1 + i,
-                                              per_device_batch=2)(bg_mesh))
-                ids = sorted(d.id for d in bg_mesh.devices.flat)
-                print(f"bg tenant {i} ({bg_arch}) on disjoint submesh "
-                      f"devices {ids} (batch 2/device)")
-            else:
-                from repro.models.api import get_model, make_batch
-                from repro.optim.optimizer import make_optimizer
-                from repro.train.state import init_state
-                from repro.train.step import make_train_step
-
-                bcfg = get_config(bg_arch).reduced()
-                bapi = get_model(bcfg)
-                bopt = make_optimizer(bcfg)
-                bstate = init_state(jax.random.PRNGKey(1 + i), bapi, bopt)
-                bstep = jax.jit(make_train_step(bapi, bopt))
-                bbatch = make_batch(jax.random.PRNGKey(2 + i), bcfg, 2, 32)
-                holder = {"state": bstate}
-
-                def same_device_fn(holder=holder, bstep=bstep, bbatch=bbatch):
-                    holder["state"], _ = bstep(holder["state"], bbatch)
-
-                bg_fns.append(same_device_fn)
-                print(f"bg tenant {i} ({bg_arch}) same-device fallback")
+        bg_fns = _register_bg_jobs(coord, archs, meshes)
         if len(bg_fns) == 1:
             bg_fn = bg_fns[0]
         else:
@@ -163,12 +200,29 @@ def main():
             def bg_fn():
                 next(cycle)()
 
-    tc = TrainConfig(steps=args.steps, ckpt_dir=args.ckpt_dir, bg_step_fn=bg_fn)
+    # live control plane: this single-process entrypoint co-hosts both
+    # sides — the worker beats over the transport, the CoordinatorLoop
+    # consumes them, so a stalled worker is detected from live beats
+    # (handle_failure + re-plan + reconfig event) instead of only via the
+    # fail-stop exception path.  Multi-host runs swap the fake pair for
+    # KVStoreTransport over the jax.distributed KV store.
+    from repro.dist.faults import HeartbeatMonitor
+    from repro.dist.transport import CoordinatorLoop, fake_transport_pair
+
+    worker_end, coord_end = fake_transport_pair()
+    hb = HeartbeatMonitor(n_workers=1, timeout=args.hb_timeout)
+    control_loop = CoordinatorLoop(coord_end, hb, coordinator=coord)
+
+    tc = TrainConfig(steps=args.steps, ckpt_dir=args.ckpt_dir,
+                     bg_step_fn=bg_fn, coordinator=coord, heartbeat=hb,
+                     transport=worker_end, control_loop=control_loop,
+                     admit_every=max(0, args.admit_every))
     report = train(run_cfg, shape, mesh, tc)
     print(
         f"done: steps={report.steps_done} loss {report.losses[0]:.3f} -> "
         f"{report.losses[-1]:.3f} restarts={report.restarts} "
         f"bg_steps={report.bg_steps} "
+        f"mitigations={len(report.mitigations)} "
         f"mean_step={1e3 * sum(report.step_times) / len(report.step_times):.1f} ms"
     )
 

@@ -1,13 +1,15 @@
 """Trace-driven cluster simulation at deployment scale.
 
 Replays seeded or hand-written cluster event traces (job churn, device
-failures, elastic rejoins — JSON schema in ``repro.sim.trace``) through the
-real control plane: ``ClusterCoordinator`` on a virtual clock, the
-vectorized matrix-DP planner for every re-plan, ``Collocator.admit()``
-under the measurement-calibrated ``InterferenceModel``, and the
-``ExecutableCache`` via the prediction-only collocation path — no
-accelerator or compilation anywhere, so 1024 simulated devices replay in
-seconds on a laptop.
+failures, elastic rejoins, heartbeat losses — JSON schema in
+``repro.sim.trace``) through the real control plane: ``ClusterCoordinator``
+on a virtual clock, the vectorized matrix-DP planner for every re-plan,
+``Collocator.admit()`` under the measurement-calibrated
+``InterferenceModel``, the ``ExecutableCache`` via the prediction-only
+collocation path, and the live transport consumption loop
+(``repro.dist.transport.CoordinatorLoop`` detecting silenced devices from
+missing beats) — no accelerator or compilation anywhere, so 1024 simulated
+devices replay in seconds on a laptop.
 
 CLI::
 
@@ -22,6 +24,7 @@ from repro.sim.trace import (
     Trace,
     TraceEvent,
     generate_failure_storm,
+    generate_heartbeat_loss,
     generate_trace,
     load_trace,
     save_trace,
@@ -34,6 +37,7 @@ __all__ = [
     "Trace",
     "TraceEvent",
     "generate_failure_storm",
+    "generate_heartbeat_loss",
     "generate_trace",
     "load_trace",
     "save_trace",

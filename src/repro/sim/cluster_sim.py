@@ -1,8 +1,16 @@
 """Trace-driven cluster simulator: the real control plane, a virtual clock.
 
 Replays a ``repro.sim.trace.Trace`` (job arrivals / departures, device
-failures / rejoins) through the REAL coordination stack — no stubs:
+failures / rejoins, heartbeat losses) through the REAL coordination stack
+— no stubs:
 
+  * the live transport consumption path: every simulated device publishes
+    heartbeats over an ``InProcessBus`` and a ``CoordinatorLoop`` pumps
+    them at every boundary — a ``heartbeat_loss`` event silences a device
+    and the loss must be *detected* (``HeartbeatMonitor.failed()`` at
+    ``t + hb_timeout``) before ``handle_failure`` fires, exactly the code
+    path the live train loop runs (the simulator is the regression bed
+    for the control plane before hardware),
   * ``ClusterCoordinator`` with an injected virtual clock and
     ``virtual_devices=True`` (device ids are the simulated healthy indices,
     so a 1024-device cluster runs on a 0-accelerator host),
@@ -53,6 +61,8 @@ from repro.core.multiplex import (
     MultiplexSim,
     QoSMonitor,
 )
+from repro.dist.faults import HeartbeatMonitor, MitigationLog
+from repro.dist.transport import CoordinatorLoop, InProcessBus, WorkerClient
 from repro.sim.trace import Trace
 
 
@@ -105,6 +115,11 @@ class SimReport:
     jain_service: float     # Jain over per-job accumulated weighted service
     mean_fg_slowdown: float  # time-weighted
     per_job_service: Dict[str, float] = field(default_factory=dict)
+    # per-kind counts from the live control plane's MitigationLog
+    # (failure_detected / replan / straggler_worker / ...): non-empty only
+    # when the trace carries heartbeat_loss events, and deterministic —
+    # the CI gate pins the counts across replays
+    mitigations: Dict[str, int] = field(default_factory=dict)
     segments: List[Segment] = field(default_factory=list)
 
     @property
@@ -153,6 +168,7 @@ class ClusterSim:
         interference: Optional[InterferenceModel] = None,
         qos_bound: float = QOS_SLOWDOWN_BOUND,
         fg_job: str = "fg",
+        hb_timeout: float = 5.0,
     ):
         self.trace = trace
         self.graph = graph
@@ -165,13 +181,19 @@ class ClusterSim:
         self.interference = interference or InterferenceModel()
         self.qos_bound = qos_bound
         self.fg_job = fg_job
+        # heartbeat_loss detection latency: a silenced device is declared
+        # failed by the CoordinatorLoop hb_timeout virtual seconds after
+        # its last beat (a synthetic detection boundary is inserted there)
+        self.hb_timeout = hb_timeout
         self._t = 0.0
+        self._silent: set = set()
 
     # -- replay -------------------------------------------------------------
 
     def run(self, *, keep_segments: bool = True) -> SimReport:
         tr = self.trace
         self._t = 0.0
+        self._silent = set()
         coord = ClusterCoordinator(
             tr.n_devices, self.hw, clock=lambda: self._t,
             virtual_devices=True,
@@ -182,15 +204,35 @@ class ClusterSim:
                 amp_limit=self.amp_limit)
         )
         horizon = tr.horizon or (tr.events[-1].t if tr.events else 0.0)
+        # the live control plane: every simulated device beats over the bus
+        # at each boundary; the CoordinatorLoop pumps the same consumption
+        # path the train loop runs (detection -> handle_failure -> replan).
+        # Admission stays with _epoch (the sweep below is richer: it feeds
+        # the cache-traffic and goodput accounting), so the loop's own
+        # readmit hook is off.
+        bus = InProcessBus()
+        monitor = HeartbeatMonitor(tr.n_devices, timeout=self.hb_timeout,
+                                   clock=lambda: self._t)
+        mlog = MitigationLog()
+        cloop = CoordinatorLoop(bus, monitor, coordinator=coord, log=mlog)
+        workers = {w: WorkerClient(bus, w) for w in range(tr.n_devices)}
+        # synthetic detection boundaries: a silenced device's loss becomes
+        # visible exactly hb_timeout after its last beat.  Merged stably
+        # (time, then trace order, events before detections at equal t) so
+        # the replay stays deterministic.
+        entries = [(e.t, 0, i, e) for i, e in enumerate(tr.events)]
+        for i, e in enumerate(tr.events):
+            if e.kind == "heartbeat_loss" and e.t + self.hb_timeout < horizon:
+                entries.append((e.t + self.hb_timeout, 1, i, None))
+        entries.sort(key=lambda x: (x[0], x[1], x[2]))
         segments: List[Segment] = []
         per_job: Dict[str, float] = {}
         n_replans = 0
         admitted_total = rejected_total = 0
         epoch = self._epoch(coord)
         t_prev = 0.0
-        boundaries = [e.t for e in tr.events] + [horizon]
-        events = list(tr.events) + [None]
-        for ev, t_ev in zip(events, boundaries):
+        beat_round = 0
+        for t_ev, _phase, _i, ev in entries + [(horizon, 2, -1, None)]:
             t_ev = min(max(t_ev, t_prev), horizon)
             if t_ev > t_prev:
                 seg = self._integrate(epoch, t_prev, t_ev, per_job)
@@ -198,11 +240,23 @@ class ClusterSim:
                 admitted_total += seg.n_admitted
                 rejected_total += seg.n_tenants - seg.n_admitted
                 t_prev = t_ev
-            if ev is None:
+            if _phase == 2:
                 break
-            self._t = ev.t
-            changed, replanned = self._apply(coord, ev)
-            n_replans += replanned
+            self._t = t_ev
+            # live beats from every healthy, non-silent device, then pump:
+            # a silenced device's age crosses hb_timeout exactly at its
+            # synthetic boundary and the loop fires handle_failure itself
+            beat_round += 1
+            for w in sorted(coord.healthy - self._silent):
+                if w in monitor.last:
+                    workers[w].beat(beat_round)
+            live_replans = cloop.pump()
+            n_replans += len(live_replans)
+            changed = bool(live_replans)
+            if ev is not None:
+                ev_changed, replanned = self._apply(coord, monitor, ev)
+                n_replans += replanned
+                changed = changed or ev_changed
             if changed:
                 epoch = self._epoch(coord)
         total_t = sum(s.t1 - s.t0 for s in segments) or 1e-30
@@ -227,12 +281,15 @@ class ClusterSim:
             jain_service=_jain(list(per_job.values())),
             mean_fg_slowdown=slow_avg,
             per_job_service=per_job,
+            mitigations={k: mlog.count(k) for k in sorted(
+                {e["kind"] for e in mlog.events})},
             segments=segments if keep_segments else [],
         )
 
     # -- event application --------------------------------------------------
 
-    def _apply(self, coord: ClusterCoordinator, ev) -> Tuple[bool, int]:
+    def _apply(self, coord: ClusterCoordinator, monitor: HeartbeatMonitor,
+               ev) -> Tuple[bool, int]:
         """Returns (state_changed, n_replans)."""
         if ev.kind == "job_arrival":
             coord.submit_background(Job(
@@ -247,13 +304,28 @@ class ClusterSim:
         if ev.kind == "device_failure":
             if ev.device not in coord.healthy or len(coord.healthy) <= 1:
                 return False, 0
+            # fail-stop: the loss is ANNOUNCED (not detected) — handled
+            # directly, and the monitor stops tracking the device so the
+            # heartbeat path can't double-report it later
+            monitor.forget(ev.device)
+            self._silent.discard(ev.device)
             coord.handle_failure(ev.device)
             return True, 1
         if ev.kind == "device_join":
             if ev.device in coord.healthy:
                 return False, 0
+            monitor.join(ev.device)
+            self._silent.discard(ev.device)
             coord.handle_join([ev.device])
             return True, 1
+        if ev.kind == "heartbeat_loss":
+            # the device goes silent NOW; nothing else happens until the
+            # CoordinatorLoop detects the missing beats hb_timeout later
+            # (the synthetic detection boundary pumps it)
+            if ev.device not in coord.healthy or ev.device in self._silent:
+                return False, 0
+            self._silent.add(ev.device)
+            return False, 0
         raise ValueError(f"unknown trace event kind: {ev.kind!r}")
 
     # -- per-epoch operating point ------------------------------------------

@@ -2,13 +2,22 @@
 
 A trace is the replayable input of the cluster simulator
 (``repro.sim.cluster_sim``): a device count plus a time-ordered list of
-events drawn from four kinds —
+events drawn from five kinds —
 
   job_arrival     a background job enters the cluster
                   (fields: job, priority, weight, quantum)
   job_departure   a background job finishes / leaves (field: job)
-  device_failure  one device dies (field: device)
+  device_failure  one device dies fail-stop, announced to the coordinator
+                  directly (field: device)
   device_join     a device (re)joins the pool (field: device)
+  heartbeat_loss  a device goes *silent* at t — its heartbeats stop but
+                  nothing announces the loss (field: device).  The
+                  simulator replays this through the live control plane:
+                  the device keeps beating until t, then the coordinator's
+                  ``CoordinatorLoop`` must *detect* the loss from missing
+                  beats (``HeartbeatMonitor.failed()`` at t + hb_timeout)
+                  and fire ``handle_failure`` itself — the same
+                  consumption path the live train loop runs.
 
 Trace JSON schema (version 1)::
 
@@ -38,7 +47,8 @@ import random
 from dataclasses import asdict, dataclass, field
 from typing import List, Optional
 
-EVENT_KINDS = ("job_arrival", "job_departure", "device_failure", "device_join")
+EVENT_KINDS = ("job_arrival", "job_departure", "device_failure",
+               "device_join", "heartbeat_loss")
 
 
 @dataclass(frozen=True)
@@ -192,6 +202,39 @@ def generate_failure_storm(
         t += rng.expovariate(n_dead / (horizon * 0.4))
         events.append(TraceEvent(t=round(min(t, horizon * 0.6), 6),
                                  kind="device_failure", device=dev))
+    return Trace(n_devices=n_devices, events=_sorted(events), seed=seed,
+                 horizon=horizon)
+
+
+def generate_heartbeat_loss(
+    n_devices: int,
+    seed: int = 0,
+    *,
+    horizon: float = 120.0,
+    n_losses: int = 3,
+    n_jobs: int = 2,
+) -> Trace:
+    """A heartbeat-loss trace: ``n_losses`` distinct devices go silent
+    (their beats stop, nothing announces the loss) spread over the middle
+    of the horizon, with ``n_jobs`` background jobs around so the
+    continuous-admission re-sweep has a roster to re-decide after each
+    detected loss.  The losses are never rejoined — the final healthy pool
+    is exactly ``n_devices - n_losses``, which pins the detection path:
+    every loss must be *detected* from missing beats for the pool to get
+    there."""
+    rng = random.Random(seed)
+    events: List[TraceEvent] = [
+        TraceEvent(t=float(1 + i), kind="job_arrival", job=f"bg{i:03d}",
+                   priority=1, weight=1.0, quantum=1)
+        for i in range(n_jobs)
+    ]
+    victims = rng.sample(range(n_devices), n_losses)
+    for i, dev in enumerate(victims):
+        t = horizon * (0.2 + 0.5 * i / max(1, n_losses - 1)
+                       if n_losses > 1 else 0.3)
+        t += rng.uniform(0.0, horizon * 0.05)
+        events.append(TraceEvent(t=round(t, 6), kind="heartbeat_loss",
+                                 device=dev))
     return Trace(n_devices=n_devices, events=_sorted(events), seed=seed,
                  horizon=horizon)
 

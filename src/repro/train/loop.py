@@ -23,6 +23,7 @@ from repro.configs.base import ModelConfig, ShapeConfig
 from repro.core.multiplex import Collocator, MultiplexConfig, QoSMonitor
 from repro.data.pipeline import SyntheticLMData
 from repro.dist.faults import HeartbeatMonitor, MitigationLog, StepTimer
+from repro.dist.transport import WorkerClient
 from repro.models.api import get_model
 from repro.optim.optimizer import make_optimizer
 from repro.train.state import init_state
@@ -47,6 +48,18 @@ class TrainConfig:
     coordinator: Optional[Any] = None  # ClusterCoordinator
     heartbeat: Optional[HeartbeatMonitor] = None
     worker_id: int = 0
+    # live control plane: with `transport` set, beats go over the wire
+    # (WorkerClient) instead of directly into `heartbeat`, and the worker
+    # applies reconfiguration events the coordinator pushes back; with
+    # `control_loop` set (single-process runs host the coordinator side
+    # in the same loop), every step pumps the consumption path so
+    # HeartbeatMonitor.failed()/stragglers() drive handle_failure +
+    # MitigationLog from live beats.  `admit_every` > 0 re-sweeps tenant
+    # admission (coordinator.readmit) every that-many steps — the
+    # continuous-admission epoch cadence
+    transport: Optional[Any] = None  # worker-side Transport endpoint
+    control_loop: Optional[Any] = None  # CoordinatorLoop (co-hosted)
+    admit_every: int = 0
 
 
 @dataclass
@@ -96,6 +109,11 @@ def train(
         step = start_step
         inflight_bg = 0
         flagged_stragglers: set = set()
+        worker_client = (WorkerClient(tc.transport, tc.worker_id)
+                         if tc.transport is not None else None)
+        if tc.control_loop is not None and tc.control_loop.log is None:
+            tc.control_loop.log = report.mitigations
+        admitted: Optional[tuple] = None
         while step < tc.steps:
             try:
                 if fault_injector is not None:
@@ -120,13 +138,48 @@ def train(
                 report.step_times.append(dt)
                 step += 1
                 report.steps_done += 1
-                if tc.heartbeat is not None:
+                if worker_client is not None:
+                    # live path: the beat goes over the transport; the
+                    # co-hosted CoordinatorLoop (or a remote coordinator)
+                    # consumes it — detection, handle_failure, straggler
+                    # logging and continuous admission all happen on the
+                    # consumption side, not here
+                    worker_client.beat(step)
+                elif tc.heartbeat is not None:
                     tc.heartbeat.beat(tc.worker_id, step)
+                if tc.control_loop is not None:
+                    tc.control_loop.pump()
+                elif tc.heartbeat is not None:
+                    # legacy in-process path (no transport): classify
+                    # stragglers directly off the monitor
                     lagging = set(tc.heartbeat.stragglers())
                     for w in sorted(lagging - flagged_stragglers):
                         report.mitigations.log("straggler_worker", step=step,
                                                worker=w)
                     flagged_stragglers = lagging  # recovered workers re-arm
+                if worker_client is not None:
+                    # epoch-boundary reconfiguration: apply re-plans the
+                    # coordinator pushed back since the last step
+                    for ev in worker_client.poll_reconfig():
+                        report.mitigations.log(
+                            "reconfig", step=step,
+                            **{k: v for k, v in ev.items() if k != "kind"}
+                        )
+                if (tc.admit_every > 0 and tc.coordinator is not None
+                        and step % tc.admit_every == 0):
+                    # continuous admission: re-sweep the tenant roster at
+                    # the epoch cadence (churn events re-sweep via the
+                    # control loop); log only when the admitted set changed
+                    decision = tc.coordinator.readmit(reason="epoch")
+                    if decision is not None:
+                        now = tuple(t.job for t in decision.admitted)
+                        if admitted is not None and now != admitted:
+                            report.mitigations.log(
+                                "admission", step=step,
+                                admitted=list(now),
+                                rejected=[t.job for t in decision.rejected],
+                            )
+                        admitted = now
                 if tc.ckpt_dir and step % tc.ckpt_every == 0:
                     ckpt_lib.save(tc.ckpt_dir, state, step, keep=tc.keep,
                                   extra_meta={"data": data.state()},

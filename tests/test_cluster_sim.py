@@ -23,6 +23,7 @@ from repro.sim import (
     Trace,
     TraceEvent,
     generate_failure_storm,
+    generate_heartbeat_loss,
     generate_trace,
     load_trace,
     save_trace,
@@ -159,3 +160,72 @@ def test_committed_traces_replay_and_gate():
     rep = _sim(tr).run()
     dp = plan_data_parallel(GRAPH, 128, hw=A100)
     assert rep.mean_goodput_rate > dp.speedup
+
+
+# -- heartbeat-loss traces: the LIVE detection path ---------------------------
+
+
+def test_heartbeat_loss_generator_deterministic_and_well_formed():
+    a = generate_heartbeat_loss(64, seed=5, n_losses=3, n_jobs=2)
+    b = generate_heartbeat_loss(64, seed=5, n_losses=3, n_jobs=2)
+    assert a.to_json() == b.to_json()
+    losses = [e for e in a.events if e.kind == "heartbeat_loss"]
+    assert len(losses) == 3
+    assert len({e.device for e in losses}) == 3  # distinct victims
+    assert all(0 <= e.device < 64 for e in losses)
+    assert sum(1 for e in a.events if e.kind == "job_arrival") == 2
+    ts = [e.t for e in a.events]
+    assert ts == sorted(ts)
+
+
+def test_heartbeat_loss_detected_by_live_consumption_path():
+    """A silenced device is never announced: the replay must DETECT each
+    loss from missing beats (CoordinatorLoop.pump over the InProcessBus,
+    exactly the train loop's consumption path) for the pool to reach
+    n - n_losses.  Mitigation counts are deterministic and the fg re-plans
+    onto the exact (non-pow2) surviving pool at every detection."""
+    tr = generate_heartbeat_loss(16, seed=3, n_losses=3, n_jobs=2)
+    sim = _sim(tr, hb_timeout=5.0)
+    rep = sim.run()
+    assert rep.mitigations == {"failure_detected": 3, "replan": 3}
+    assert rep.n_replans == 3
+    assert rep.segments[-1].n_healthy == 13
+    assert rep.segments[-1].plan_gpus == 13  # exact survivors, non-pow2
+    # detection lands exactly hb_timeout after each loss: some segment
+    # boundary sits at t_loss + hb_timeout for every silenced device
+    bounds = {round(s.t0, 6) for s in rep.segments}
+    for e in tr.events:
+        if e.kind == "heartbeat_loss":
+            assert round(e.t + 5.0, 6) in bounds
+    # bit-identical replay: same trace, fresh sim, same report
+    rep2 = _sim(tr, hb_timeout=5.0).run()
+    assert rep.to_json(with_segments=True) == rep2.to_json(with_segments=True)
+
+
+def test_heartbeat_loss_roundtrips_through_json(tmp_path):
+    tr = generate_heartbeat_loss(32, seed=9, n_losses=2, n_jobs=1)
+    p = tmp_path / "hb.json"
+    save_trace(tr, p)
+    rep1 = _sim(tr, hb_timeout=4.0).run()
+    rep2 = _sim(load_trace(p), hb_timeout=4.0).run()
+    assert rep1.to_json(with_segments=True) == rep2.to_json(with_segments=True)
+    assert rep1.mitigations["failure_detected"] == 2
+
+
+def test_committed_heartbeat_loss_trace_gates_mitigations():
+    """The checked-in heartbeat-loss trace replays deterministically with
+    every loss detected — the CI gate's tier-1 counterpart."""
+    import os
+
+    path = os.path.join(os.path.dirname(__file__), "..", "benchmarks",
+                        "traces", "heartbeat_loss_128.json")
+    tr = load_trace(path)
+    assert tr.n_devices == 128
+    n_losses = sum(1 for e in tr.events if e.kind == "heartbeat_loss")
+    assert n_losses == 3
+    rep = _sim(tr).run()
+    assert rep.mitigations["failure_detected"] == n_losses
+    assert rep.mitigations["replan"] == n_losses
+    assert rep.segments[-1].n_healthy == 128 - n_losses
+    assert rep.segments[-1].plan_gpus == 128 - n_losses
+    assert rep.mean_fg_slowdown <= 1.33 + 1e-9

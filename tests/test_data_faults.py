@@ -68,3 +68,39 @@ def test_mitigation_log():
     m.log("failure", step=4)
     m.log("straggler", step=9)
     assert m.count("straggler") == 2 and m.count("failure") == 1
+
+
+def test_step_timer_ema_not_poisoned_by_stragglers():
+    """Regression: over-deadline samples folded into the EMA inflated the
+    deadline after one slow step, so a persistently slow worker stopped
+    being flagged within a few steps.  Straggler samples must be excluded
+    from the EMA — the worker stays flagged for as long as it is slow."""
+    t = StepTimer(deadline_factor=2.0, warmup_steps=3, ema_alpha=0.2)
+    for _ in range(5):
+        t.record(1.0)
+    ema0 = t.ema
+    for _ in range(20):  # persistently slow: EVERY step stays flagged
+        assert t.is_straggler_step(3.0)
+        t.record(3.0)
+    assert t.is_straggler_step(3.0)
+    assert t.ema == pytest.approx(ema0)  # straggler samples never folded in
+    t.record(1.1)  # healthy samples still adapt the deadline
+    assert t.ema > ema0
+
+
+def test_heartbeat_unknown_beat_join_forget():
+    """Regression: beat() silently accepted unknown worker ids — `last`
+    grew past n_workers with no join semantics and the coordinator never
+    learned a device appeared.  Unknown beats are now a hard error; the
+    explicit join()/forget() lifecycle is idempotent."""
+    clock = {"t": 0.0}
+    hb = HeartbeatMonitor(n_workers=2, timeout=5.0, clock=lambda: clock["t"])
+    with pytest.raises(KeyError):
+        hb.beat(9, step=0)
+    assert hb.join(9) is True and hb.n_workers == 3
+    hb.beat(9, step=0)  # registered now
+    assert hb.join(9) is False  # idempotent re-join
+    clock["t"] = 10.0
+    assert hb.failed() == [0, 1, 9]
+    assert hb.forget(9) is True and hb.forget(9) is False
+    assert hb.failed() == [0, 1] and hb.n_workers == 2

@@ -705,3 +705,122 @@ def test_calibrated_model_flows_into_sim(vgg_plan):
     b = MultiplexSim(vgg_plan, gpu_cfg,
                      InterferenceModel(gap_inflation=1.5)).run(10)
     assert a.fg_slowdown == pytest.approx(b.fg_slowdown)
+
+
+# -- tenant-density-aware interference ---------------------------------------
+
+
+def test_density_factor_and_gap_inflation_at():
+    m = InterferenceModel(gap_inflation=1.2, density_slope=2.0)
+    assert m.density_factor(1.0) == 1.0
+    assert m.density_factor(0.5) == 1.0  # degenerate densities are safe
+    assert m.density_factor(3.0) == pytest.approx(5.0)
+    assert m.gap_inflation_at(0, 1.0) == pytest.approx(1.2)
+    # excess scales with density: 1 + 0.2 * (1 + 2*(3-1))
+    assert m.gap_inflation_at(0, 3.0) == pytest.approx(2.0)
+    # slope 0 (the default) is density-blind: prior behavior everywhere
+    blind = InterferenceModel(gap_inflation=1.2)
+    assert blind.gap_inflation_at(0, 4.0) == pytest.approx(1.2)
+    assert blind.gap_inflation_at(0, 4.0) == blind.gap_inflation_for(0)
+
+
+def test_predict_density_monotone_and_marginal_admission(vgg_plan):
+    """With a positive density slope each extra collocated tenant inflates
+    the shared gap stages a bit more, so the admission curve peaks at some
+    0 < k < n — the sweep rejects the MARGINAL tenant, not all-or-nothing
+    (a density-blind model predicts the same slowdown for every k >= 1)."""
+    col = Collocator(
+        vgg_plan, MultiplexConfig(max_inflight=2), tenants=_tenants(4),
+        interference=InterferenceModel(gap_inflation=1.15, density_slope=2.0),
+    )
+    s = [col.predict(k).fg_slowdown for k in range(5)]
+    assert s[0] == 1.0
+    assert all(s[i] <= s[i + 1] + 1e-12 for i in range(4))  # monotone in k
+    assert s[4] > s[1] + 1e-6  # density genuinely binds
+    decision = col.admit(max_fg_slowdown=1.33)
+    assert 0 < decision.n_admitted < 4, decision.row()
+    assert decision.rejected
+    # the chosen operating point is feasible; the rejected tail is not
+    slows = {k: sl for k, sl, _ in decision.curve}
+    assert slows[decision.n_admitted] <= 1.33 + 1e-9
+    assert max(slows.values()) > 1.33
+
+
+def _measured_at_density(slowdown, density, steps=6.0):
+    """A measured result whose tenant rows all share gap stage 0, so the
+    result's mean collocated density is exactly ``density``."""
+    rows = tuple(
+        TenantResult(f"t{i}", 0, steps / density,
+                     steps / density / slowdown, gap_stages=(0,))
+        for i in range(density)
+    )
+    return CollocationResult(
+        fg_iter_time=slowdown, fg_iter_time_isolated=1.0,
+        fg_slowdown=slowdown, bg_steps_per_iter=steps,
+        bg_throughput=steps / slowdown, iterations=3, tenants=rows,
+    )
+
+
+def test_calibrate_fits_density_slope(vgg_plan):
+    import math
+
+    col = Collocator(vgg_plan, MultiplexConfig(max_inflight=2),
+                     tenants=_tenants(2))
+    model = col.calibrate([_measured_at_density(1.06, 1),
+                           _measured_at_density(1.12, 2)])
+    # excess doubles when density goes 1 -> 2: slope identifies as 1.0
+    assert model.density_slope == pytest.approx(1.0)
+    assert model.gap_inflation > 1.0
+    # the stored multipliers are density-1 BASES: prediction at the
+    # calibration density still reproduces the measured geomean exactly
+    geomean = math.exp((math.log(1.06) + math.log(1.12)) / 2)
+    assert col.predict().fg_slowdown == pytest.approx(geomean, abs=1e-9)
+    # interference SHRINKING with density is measurement noise: slope -> 0
+    m_noise = col.calibrate([_measured_at_density(1.2, 1),
+                             _measured_at_density(1.05, 2)])
+    assert m_noise.density_slope == 0.0
+    # results at a single density cannot identify the slope: prior kept
+    col2 = Collocator(vgg_plan, MultiplexConfig(max_inflight=2),
+                      tenants=_tenants(2),
+                      interference=InterferenceModel(density_slope=0.7))
+    m_single = col2.calibrate([_measured(1.1), _measured(1.2)])
+    assert m_single.density_slope == pytest.approx(0.7)
+
+
+def test_coordinator_readmit_continuous_admission():
+    """`readmit` re-sweeps the live roster per epoch / on churn: with the
+    density-aware model it keeps the feasible prefix and rejects the
+    marginal tenant, logging an 'admission' event only when the admitted
+    set CHANGES (stable rosters stay silent)."""
+    from repro.core.coordinator import ClusterCoordinator, Job
+    from repro.models.graph import build_vgg_graph
+
+    coord = ClusterCoordinator(8, virtual_devices=True)
+    coord.submit_foreground(
+        Job("fg", "foreground", build_vgg_graph(VCFG, 32), amp_limit=1.5)
+    )
+    assert coord.readmit() is None  # no tenants: nothing to decide
+    for i in range(3):
+        coord.submit_background(
+            Job(f"bg{i}", "background", [], priority=3 - i)
+        )
+    coord.interference = InterferenceModel(gap_inflation=1.28,
+                                           density_slope=3.0)
+    d1 = coord.readmit()
+    assert d1 is not None and 0 < d1.n_admitted < 3, d1.row()
+    assert coord.last_admission is d1
+    admissions = [e for e in coord.events if e.kind == "admission"]
+    assert len(admissions) == 1 and "epoch" in admissions[0].detail
+    # stable roster re-admitted at the next epoch: same set, no new event
+    d2 = coord.readmit()
+    assert tuple(t.job for t in d2.admitted) == tuple(
+        t.job for t in d1.admitted)
+    assert len([e for e in coord.events if e.kind == "admission"]) == 1
+    # churn: an admitted tenant departs -> the re-sweep decides anew and
+    # logs the changed set
+    gone = d1.admitted[0].job
+    assert coord.handle_departure(gone)
+    d3 = coord.readmit(reason="churn")
+    assert gone not in [t.job for t in d3.admitted]
+    churn = [e for e in coord.events if e.kind == "admission"]
+    assert len(churn) == 2 and "churn" in churn[1].detail

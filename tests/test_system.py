@@ -85,3 +85,29 @@ def test_coordinator_collocation_sim():
     res = coord.simulate_collocation()
     assert res.fg_slowdown < 1.2
     assert res.cluster_throughput > 0.0
+
+
+def test_register_bg_jobs_rosters_tenants_with_factories():
+    """Regression: launch/train.py used to register background jobs as bare
+    Job(..., []) shells without step_fn_factory — background_tenants()
+    skips factory-less jobs, so coordinator-driven collocation/admission
+    silently saw ZERO tenants.  The registration helper must attach the
+    factory (and a cache-key signature) to every job it submits."""
+    from repro.configs.vgg16 import CONFIG as VCFG
+    from repro.launch.train import _register_bg_jobs
+
+    coord = ClusterCoordinator(8)
+    coord.submit_foreground(
+        Job("fg", "foreground", build_vgg_graph(VCFG, 32), amp_limit=1.5)
+    )
+    bg_fns = _register_bg_jobs(coord, ["qwen2-1.5b"], [None])
+    assert len(bg_fns) == 1 and callable(bg_fns[0])
+    tenants = coord.background_tenants()  # no default factory passed
+    assert len(tenants) == 1
+    t = tenants[0]
+    assert t.job == "bg0-qwen2-1.5b" and t.step_fn_factory is not None
+    # the factory carries a distinct cache signature (arch/batch/seed
+    # scoped) so two tenants never share a compiled step through the cache
+    assert t.cache_signature == "qwen2-1.5b-samedev-b2-s32-r1"
+    # the rostered factory is the paced slot's step fn for any mesh
+    assert t.step_fn_factory(None) is bg_fns[0]

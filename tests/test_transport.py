@@ -1,0 +1,317 @@
+"""Live control-plane transport (repro.dist.transport): ISSUE 7 tentpole.
+
+Pins the transport contract (append-only per-topic logs, cursor-based
+polling, deterministic order), the three implementations (InProcessBus,
+fake two-endpoint pair with JSON enforcement + disconnect, KVStoreTransport
+over an injected KV client), and the consumption path that makes failure
+handling LIVE: a worker whose heartbeats stop is detected within the
+timeout by ``CoordinatorLoop.pump()`` and the foreground re-plans onto the
+exact (non-pow2) surviving pool — no injected events anywhere.
+"""
+import dataclasses
+
+import pytest
+
+from repro.configs.vgg16 import CONFIG as VCFG
+from repro.core.coordinator import ClusterCoordinator, Job
+from repro.dist.faults import HeartbeatMonitor, MitigationLog
+from repro.dist.transport import (
+    HEARTBEAT_TOPIC,
+    RECONFIG_TOPIC,
+    CoordinatorLoop,
+    InProcessBus,
+    KVStoreTransport,
+    WorkerClient,
+    fake_transport_pair,
+)
+from repro.models.graph import build_vgg_graph
+
+GRAPH = build_vgg_graph(VCFG, 32)
+
+
+# -- transport contract -----------------------------------------------------
+
+
+def test_inprocess_bus_publish_poll_since():
+    bus = InProcessBus()
+    assert bus.poll("t") == []
+    assert bus.publish("t", {"a": 1}) == 0
+    assert bus.publish("t", {"a": 2}) == 1
+    assert bus.publish("other", {"b": 1}) == 0  # per-topic sequences
+    msgs = bus.poll("t")
+    assert msgs == [(0, {"a": 1}), (1, {"a": 2})]
+    # cursor semantics: poll is non-destructive, `since` resumes exactly
+    assert bus.poll("t", since=2) == []
+    bus.publish("t", {"a": 3})
+    assert bus.poll("t", since=2) == [(2, {"a": 3})]
+    assert bus.poll("t") == msgs + [(2, {"a": 3})]  # replay from 0 intact
+
+
+def test_fake_pair_shares_one_log_and_enforces_json():
+    w, c = fake_transport_pair()
+    w.publish("hb", {"worker": 0, "step": 1})
+    assert c.poll("hb") == [(0, {"worker": 0, "step": 1})]
+    # payloads must survive a JSON round trip — a real KV store carries
+    # strings, so an object-bearing payload must fail HERE, in tests
+    with pytest.raises(TypeError):
+        w.publish("hb", {"worker": object()})
+
+
+def test_fake_pair_disconnect_drops_publishes_silently():
+    w, c = fake_transport_pair()
+    assert w.publish("hb", {"worker": 0, "step": 1}) == 0
+    w.disconnect()
+    assert w.publish("hb", {"worker": 0, "step": 2}) == -1  # dropped
+    assert w.dropped == 1
+    assert w.poll("hb") == []  # partitioned endpoint sees nothing either
+    assert c.poll("hb") == [(0, {"worker": 0, "step": 1})]
+    w.reconnect()
+    assert w.publish("hb", {"worker": 0, "step": 3}) == 1
+    assert [p["step"] for _s, p in c.poll("hb")] == [1, 3]
+
+
+class _FakeKVClient:
+    """Dict-backed stand-in for jax's DistributedRuntimeClient KV surface."""
+
+    def __init__(self):
+        self.store = {}
+
+    def key_value_set(self, key, value):
+        self.store[key] = value
+
+    def key_value_dir_get(self, prefix):
+        return [(k, v) for k, v in self.store.items() if k.startswith(prefix)]
+
+
+def test_kvstore_transport_round_trips_over_injected_client():
+    client = _FakeKVClient()
+    a = KVStoreTransport("test", client=client, uid="host0-1")
+    b = KVStoreTransport("test", client=client, uid="host1-1")
+    a.publish("hb", {"worker": 0, "step": 1})
+    b.publish("hb", {"worker": 1, "step": 1})
+    a.publish("hb", {"worker": 0, "step": 2})
+    msgs = a.poll("hb")
+    # lexicographic key order = (counter, uid): deterministic global order
+    assert [p["worker"] for _s, p in msgs] == [0, 1, 0]
+    assert [s for s, _p in msgs] == [0, 1, 2]
+    assert b.poll("hb", since=2) == [(2, {"step": 2, "worker": 0})]
+    # topics are isolated namespaces
+    assert a.poll("reconfig") == []
+
+
+def test_kvstore_transport_requires_jax_distributed():
+    # no injected client + jax.distributed never initialized -> hard error
+    with pytest.raises(RuntimeError):
+        KVStoreTransport("test")
+
+
+# -- protocol layer ---------------------------------------------------------
+
+
+def _cluster(n=8, timeout=5.0):
+    """Coordinator + monitor + loop over one bus, virtual clock."""
+    clk = {"t": 0.0}
+    bus = InProcessBus()
+    coord = ClusterCoordinator(n, clock=lambda: clk["t"],
+                               virtual_devices=True)
+    coord.submit_foreground(Job("fg", "foreground", GRAPH, amp_limit=1.5))
+    mon = HeartbeatMonitor(n, timeout=timeout, clock=lambda: clk["t"])
+    loop = CoordinatorLoop(bus, mon, coordinator=coord, log=MitigationLog())
+    workers = [WorkerClient(bus, w) for w in range(n)]
+    return clk, bus, coord, mon, loop, workers
+
+
+def test_live_failure_detection_replans_exact_survivors():
+    """THE acceptance path: worker 3's beats stop; pump() detects the loss
+    within the timeout and handle_failure re-plans onto the exact non-pow2
+    survivor count — driven end-to-end by beats, no injected events."""
+    clk, bus, coord, mon, loop, workers = _cluster(n=8, timeout=5.0)
+    assert coord.foreground().plan.num_gpus == 8
+    for step in range(3):
+        clk["t"] = float(step)
+        for w in workers:
+            w.beat(step)
+        assert loop.pump() == []  # everyone fresh: nothing to do
+    # worker 3 goes silent; the rest keep beating
+    clk["t"] = 4.0
+    for w in workers:
+        if w.worker_id != 3:
+            w.beat(3)
+    assert loop.pump() == []  # age(3) = 2.0 < timeout: not failed yet
+    clk["t"] = 7.5  # age(3) = 5.5 >= timeout
+    for w in workers:
+        if w.worker_id != 3:
+            w.beat(4)
+    events = loop.pump()
+    assert len(events) == 1 and events[0]["reason"] == "failure"
+    assert events[0]["worker"] == 3
+    assert coord.healthy == {0, 1, 2, 4, 5, 6, 7}
+    assert coord.foreground().plan.num_gpus == 7  # exact survivors, non-pow2
+    assert events[0]["gpus"] == 7
+    assert events[0]["devices"] == [0, 1, 2, 4, 5, 6, 7]
+    assert loop.log.count("failure_detected") == 1
+    assert loop.log.count("replan") == 1
+    # detection fires ONCE: the monitor forgot the worker, later pumps with
+    # the clock still past its last beat do not re-fire
+    clk["t"] = 20.0
+    for w in workers:
+        if w.worker_id != 3:
+            w.beat(5)
+    assert loop.pump() == []
+    assert loop.log.count("failure_detected") == 1
+    # every worker (and any reconfig listener) sees the re-plan event
+    wc = workers[0]
+    evs = wc.poll_reconfig()
+    assert [e["action"] for e in evs] == ["replan"]
+    assert wc.poll_reconfig() == []  # cursor advanced
+
+
+def test_unknown_beat_is_a_join_and_handle_join_is_idempotent():
+    clk, bus, coord, mon, loop, workers = _cluster(n=7, timeout=5.0)
+    p7 = coord.foreground().plan
+    assert p7.num_gpus == 7
+    # a beat from an unknown worker id is an explicit join: the monitor
+    # registers it and the coordinator re-plans to exploit the new device
+    WorkerClient(bus, 7).beat(0)
+    events = loop.pump()
+    assert mon.n_workers == 8 and 7 in mon.last
+    assert coord.healthy == set(range(8))
+    assert coord.foreground().plan.num_gpus == 8
+    assert [e["reason"] for e in events] == ["join"]
+    assert loop.log.count("join") == 1
+    n_events = len(coord.events)
+    # re-delivered beat from the (now known) worker: no join, no re-plan
+    WorkerClient(bus, 7).beat(1)
+    assert loop.pump() == []
+    assert len(coord.events) == n_events
+    # handle_join on already-healthy devices is a no-op (the old code
+    # logged a spurious +N join event and re-planned)
+    assert coord.handle_join([2, 5]) is None
+    assert len(coord.events) == n_events
+    assert coord.foreground().plan.num_gpus == 8
+
+
+def test_straggler_flagging_rearms_on_recovery():
+    clk, bus, coord, mon, loop, workers = _cluster(n=4, timeout=100.0)
+    for w in workers:
+        w.beat(10)
+    loop.pump()
+    # worker 2 falls behind the front-runner by > lag
+    clk["t"] = 1.0
+    for w in workers:
+        w.beat(2 if w.worker_id == 2 else 12)
+    loop.pump()
+    assert loop.log.count("straggler_worker") == 1
+    # still lagging: no duplicate logs while flagged
+    clk["t"] = 2.0
+    for w in workers:
+        w.beat(3 if w.worker_id == 2 else 13)
+    loop.pump()
+    assert loop.log.count("straggler_worker") == 1
+    # recovers, then lags again -> re-armed, flagged anew
+    clk["t"] = 3.0
+    for w in workers:
+        w.beat(14)
+    loop.pump()
+    clk["t"] = 4.0
+    for w in workers:
+        w.beat(5 if w.worker_id == 2 else 15)
+    loop.pump()
+    assert loop.log.count("straggler_worker") == 2
+
+
+def test_monitor_join_forget_membership():
+    clk = {"t": 0.0}
+    mon = HeartbeatMonitor(2, timeout=5.0, clock=lambda: clk["t"])
+    # beat from an unregistered worker is a hard error, not silent growth
+    with pytest.raises(KeyError):
+        mon.beat(5, 0)
+    assert mon.join(5) is True and mon.n_workers == 3
+    mon.beat(5, 0)  # now fine
+    assert mon.join(5) is False  # idempotent re-join
+    assert mon.n_workers == 3
+    clk["t"] = 10.0
+    assert mon.failed() == [0, 1, 5]
+    assert mon.forget(5) is True and mon.forget(5) is False
+    assert mon.failed() == [0, 1] and mon.n_workers == 2
+
+
+# -- live train-loop integration --------------------------------------------
+
+
+def test_train_loop_detects_silent_worker_from_live_beats():
+    """End-to-end inside train(): the loop beats over the fake transport,
+    the co-hosted CoordinatorLoop consumes them, and a phantom worker whose
+    beats stop is detected mid-run — handle_failure fires from the live
+    loop (never from the exception path), the fg re-plans onto the exact
+    surviving pool, and the reconfig event comes back to the worker."""
+    from repro.configs import TRAIN_4K, get_config
+    from repro.launch.mesh import make_mesh
+    from repro.train.loop import TrainConfig, train
+
+    clk = {"t": 0.0}
+    worker_end, coord_end = fake_transport_pair()
+    coord = ClusterCoordinator(8, clock=lambda: clk["t"],
+                               virtual_devices=True)
+    coord.submit_foreground(Job("fg", "foreground", GRAPH, amp_limit=1.5))
+    mon = HeartbeatMonitor(2, timeout=5.0, clock=lambda: clk["t"])
+    loop = CoordinatorLoop(coord_end, mon, coordinator=coord)
+    # the phantom worker (id 1) beats once at t=0, then goes silent
+    WorkerClient(worker_end, 1).beat(0)
+
+    def advance_clock(step):
+        clk["t"] = float(step)  # the REAL worker (id 0) beats every step
+
+    cfg = get_config("qwen2-1.5b").reduced()
+    shape = dataclasses.replace(TRAIN_4K, seq_len=64, global_batch=4,
+                                name="smoke")
+    tc = TrainConfig(steps=8, coordinator=coord, heartbeat=mon,
+                     transport=worker_end, control_loop=loop)
+    report = train(cfg, shape, make_mesh(1, 1), tc,
+                   fault_injector=advance_clock)
+    assert report.steps_done == 8
+    # the phantom's silence was detected from live beats: worker 1's device
+    # left the pool and the fg re-planned onto the 7 survivors
+    assert report.mitigations.count("failure_detected") == 1
+    assert report.mitigations.count("replan") == 1
+    assert report.mitigations.count("failure") == 0  # NOT the except path
+    assert coord.healthy == {0, 2, 3, 4, 5, 6, 7}
+    assert coord.foreground().plan.num_gpus == 7
+    # the worker saw the pushed-back reconfiguration event
+    assert report.mitigations.count("reconfig") == 1
+    ev = next(e for e in report.mitigations.events if e["kind"] == "reconfig")
+    assert ev["reason"] == "failure" and ev["gpus"] == 7
+    # the real worker stayed healthy the whole run
+    assert 0 in coord.healthy
+
+
+def test_train_loop_continuous_admission_resweeps_roster():
+    """admit_every triggers coordinator.readmit on the epoch cadence: with
+    a pessimistic density-aware model, the sweep rejects the marginal
+    tenant (not all-or-nothing) and logs the admission decision."""
+    from repro.configs import TRAIN_4K, get_config
+    from repro.core.multiplex import InterferenceModel
+    from repro.launch.mesh import make_mesh
+    from repro.train.loop import TrainConfig, train
+
+    coord = ClusterCoordinator(8, virtual_devices=True)
+    coord.submit_foreground(Job("fg", "foreground", GRAPH, amp_limit=1.5))
+    coord.interference = InterferenceModel(gap_inflation=1.28,
+                                           density_slope=3.0)
+    for i in range(3):
+        coord.submit_background(Job(f"bg{i}", "background", [], priority=1,
+                                    step_fn_factory=lambda mesh: (lambda: None)))
+    cfg = get_config("qwen2-1.5b").reduced()
+    shape = dataclasses.replace(TRAIN_4K, seq_len=64, global_batch=4,
+                                name="smoke")
+    tc = TrainConfig(steps=4, coordinator=coord, admit_every=2)
+    report = train(cfg, shape, make_mesh(1, 1), tc)
+    assert report.steps_done == 4
+    decision = coord.last_admission
+    assert decision is not None
+    # marginal rejection: some but not all tenants admitted
+    assert 0 < decision.n_admitted < 3, decision.row()
+    # stable roster across the run: the decision is logged as a coordinator
+    # event once (first sweep), not once per cadence tick
+    admissions = [e for e in coord.events if e.kind == "admission"]
+    assert len(admissions) == 1
