@@ -48,6 +48,7 @@ from repro.models.graph import build_vgg_graph
 from repro.sim import (
     ClusterSim,
     generate_heartbeat_loss,
+    generate_lease_churn,
     generate_trace,
     load_trace,
 )
@@ -157,6 +158,8 @@ def smoke(record: bool) -> int:
         })
     hb = _heartbeat_loss_gate(graph, imodel)
     ok &= hb["gate_ok"]
+    lc = _lease_churn_gate(graph, imodel)
+    ok &= lc["gate_ok"]
     density = _density_admission_gate(graph)
     ok &= density["gate_ok"]
     print(f"cluster-sim smoke: {'OK' if ok else 'FAIL'}")
@@ -175,6 +178,7 @@ def smoke(record: bool) -> int:
             },
             "curve": curve,
             "heartbeat_loss": hb,
+            "lease_churn": lc,
             "density_admission": density,
             "gate_ok": bool(ok),
         })
@@ -225,6 +229,65 @@ def _heartbeat_loss_gate(graph, imodel) -> dict:
         "n_losses": n_losses,
         "failure_detected": detected,
         "replans": replans,
+        "final_healthy": final.n_healthy,
+        "final_plan_gpus": final.plan_gpus,
+        "mean_fg_slowdown": rep.mean_fg_slowdown,
+        "deterministic": deterministic,
+        "gate_ok": bool(gate),
+    }
+
+
+def _lease_churn_gate(graph, imodel) -> dict:
+    """Replay the lease-churn trace through the real coordinator election:
+    the lease holder dies three times in a row, each time the lowest
+    survivor must claim the next lease epoch, rebuild coordinator state
+    from the topic log (no re-fired mitigations — exactly one detection +
+    one replan per dead ex-holder), and with per-pump GC the retained
+    topic backlog stays bounded across all three churn cycles."""
+    path = os.path.join(TRACE_DIR, "lease_churn_128.json")
+    if os.path.exists(path):
+        trace, src = load_trace(path), os.path.basename(path)
+    else:
+        trace = generate_lease_churn(128, seed=17, n_churns=3, n_jobs=2)
+        src = "generated"
+    n_churns = sum(1 for e in trace.events if e.kind == "lease_churn")
+
+    def replay():
+        return ClusterSim(trace, graph, hw=A100, amp_limit=AMP_LIMIT,
+                          interference=imodel, qos_bound=QOS_SLOWDOWN_BOUND,
+                          lease_timeout=2.0, gc_every=1).run()
+
+    rep, rep2 = replay(), replay()
+    deterministic = (rep.to_json(with_segments=True)
+                     == rep2.to_json(with_segments=True))
+    failovers = rep.mitigations.get("coordinator_failover", 0)
+    detected = rep.mitigations.get("failure_detected", 0)
+    replans = rep.mitigations.get("replan", 0)
+    final = rep.segments[-1]
+    backlog = sum(rep.topic_backlog.values())
+    gate = (deterministic
+            and rep.n_failovers == n_churns
+            and failovers == n_churns
+            and detected == n_churns      # one detection per dead holder,
+            and replans == n_churns       # never re-fired after failover
+            and final.n_healthy == trace.n_devices - n_churns
+            and final.plan_gpus == trace.n_devices - n_churns
+            and backlog <= 4              # GC keeps the logs bounded
+            and rep.mean_fg_slowdown <= QOS_SLOWDOWN_BOUND + 1e-9)
+    print(
+        f"lease-churn trace={src} churns={n_churns} "
+        f"failovers={rep.n_failovers} detected={detected} "
+        f"replans={replans} backlog={rep.topic_backlog} "
+        f"final_pool={final.n_healthy}/{trace.n_devices} "
+        f"det={deterministic} gate={'OK' if gate else 'FAIL'}"
+    )
+    return {
+        "trace": src,
+        "n_churns": n_churns,
+        "failovers": rep.n_failovers,
+        "failure_detected": detected,
+        "replans": replans,
+        "topic_backlog": rep.topic_backlog,
         "final_healthy": final.n_healthy,
         "final_plan_gpus": final.plan_gpus,
         "mean_fg_slowdown": rep.mean_fg_slowdown,

@@ -1,0 +1,109 @@
+"""Goodput regression gate over the committed benchmark trajectory.
+
+``bench_cluster_sim.py --record`` appends one record per run to
+``BENCH_cluster_sim.json``, so the committed file is a trajectory: every
+earlier record is a once-green data point.  This checker compares the
+FRESH record (the last one, just produced by the CI run) against the best
+earlier point at the large simulated scales and fails on a real drop —
+the cluster-sim job stops silently recording slowdowns as "green".
+
+Rules:
+
+  * baseline per device count = max ``multi_task_goodput`` over all
+    records before the last (the best the branch has ever measured),
+  * fail when fresh goodput < ``threshold`` x baseline (default 0.8 —
+    a >20% drop) at any gated scale (default 512 and 1024 devices),
+  * fewer than two records, or a gated scale missing from either side,
+    passes trivially (a fresh clone has no trajectory to regress from).
+
+Importable (``load_records`` / ``goodput_at`` / ``check``) for the unit
+test; the CLI exits non-zero on regression for the CI wiring.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from typing import Dict, List, Optional, Sequence, Tuple
+
+DEFAULT_FILE = "BENCH_cluster_sim.json"
+DEFAULT_DEVICES = (512, 1024)
+DEFAULT_THRESHOLD = 0.8
+
+
+def load_records(path: str) -> List[dict]:
+    with open(path) as f:
+        records = json.load(f)
+    if not isinstance(records, list):
+        raise ValueError(f"{path}: expected a list of bench records")
+    return records
+
+
+def goodput_at(record: dict, devices: int) -> Optional[float]:
+    """The record's multi-task goodput at one simulated device count, or
+    None when the record never measured that scale."""
+    for point in record.get("curve", []):
+        if point.get("devices") == devices:
+            return float(point["multi_task_goodput"])
+    return None
+
+
+def check(records: List[dict], *, devices: Sequence[int] = DEFAULT_DEVICES,
+          threshold: float = DEFAULT_THRESHOLD) -> Tuple[bool, List[Dict]]:
+    """(ok, rows): one row per gated scale with baseline / fresh / verdict.
+
+    ``ok`` is True when no gated scale dropped below threshold x baseline.
+    """
+    rows: List[Dict] = []
+    if len(records) < 2:
+        return True, rows  # no trajectory to regress from
+    fresh = records[-1]
+    for d in devices:
+        new = goodput_at(fresh, d)
+        earlier = [g for r in records[:-1]
+                   if (g := goodput_at(r, d)) is not None]
+        if new is None or not earlier:
+            continue
+        baseline = max(earlier)
+        ok = new >= threshold * baseline
+        rows.append({
+            "devices": d,
+            "baseline": baseline,
+            "fresh": new,
+            "ratio": new / baseline if baseline > 0 else float("inf"),
+            "ok": ok,
+        })
+    return all(r["ok"] for r in rows), rows
+
+
+def main(argv: Optional[Sequence[str]] = None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--file", default=DEFAULT_FILE,
+                    help="bench trajectory JSON (list of records)")
+    ap.add_argument("--devices", type=int, nargs="+",
+                    default=list(DEFAULT_DEVICES),
+                    help="simulated device counts to gate")
+    ap.add_argument("--threshold", type=float, default=DEFAULT_THRESHOLD,
+                    help="fail when fresh < threshold x best earlier")
+    args = ap.parse_args(argv)
+    records = load_records(args.file)
+    ok, rows = check(records, devices=args.devices,
+                     threshold=args.threshold)
+    if not rows:
+        print(f"check_regression: {len(records)} record(s), nothing to "
+              f"compare — pass")
+        return 0
+    for r in rows:
+        verdict = "ok" if r["ok"] else "REGRESSION"
+        print(f"check_regression: {r['devices']:>5} devices  "
+              f"baseline {r['baseline']:.2f}  fresh {r['fresh']:.2f}  "
+              f"ratio {r['ratio']:.3f}  {verdict}")
+    if not ok:
+        print(f"check_regression: goodput dropped below "
+              f"{args.threshold:.0%} of the best committed point",
+              file=sys.stderr)
+    return 0 if ok else 1
+
+
+if __name__ == "__main__":
+    sys.exit(main())

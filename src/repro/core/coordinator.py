@@ -197,6 +197,28 @@ class ClusterCoordinator:
         self._drop_stale_measurements(old, fg.plan)
         return fg.plan
 
+    def restore_pool(self, devices) -> None:
+        """Coordinator failover: adopt the surviving pool a previous holder
+        already re-planned onto (``CoordinatorLoop.bootstrap_from_log``).
+
+        Unlike ``handle_failure``/``handle_join`` this fires no mitigation
+        and publishes nothing — those mitigations already ran on the old
+        coordinator and the workers already hold the reconfig events; a
+        fresh holder that re-fired them would double-plan and double-log.
+        The foreground is re-planned *silently* when its plan does not
+        match the restored pool, and stale executables are evicted."""
+        self.healthy = set(int(d) for d in devices)
+        self._evict_stale_executables()
+        fg = self.foreground()
+        if fg is None:
+            return
+        if fg.plan is None or fg.plan.num_gpus != len(self.healthy):
+            old = fg.plan
+            fg.plan = make_plan(fg.graph, self._usable_devices(),
+                                fg.amp_limit, self.hw)
+            fg.devices = tuple(sorted(self.healthy))
+            self._drop_stale_measurements(old, fg.plan)
+
     def handle_departure(self, name: str) -> bool:
         """Tenant churn: a running job finishes/leaves the cluster.  The job
         is marked done (so ``background_tenants`` stops rostering it) and

@@ -64,6 +64,28 @@ def mesh_axis_sizes(mesh: Mesh) -> dict:
     return dict(zip(mesh.axis_names, mesh.devices.shape))
 
 
+def remesh_for_pool(device_ids, *, devices: Optional[Sequence] = None) -> Mesh:
+    """Re-carve a mesh onto a surviving device pool (applied reconfig).
+
+    ``device_ids`` is the healthy pool from a reconfiguration event
+    (``CoordinatorLoop`` publishes the coordinator's sorted healthy set).
+    Ids map positionally onto the process device list — the same
+    positional contract ``submesh_from_range`` and the executable-cache
+    eviction use — and ids beyond it (devices hosted by other processes,
+    or virtual ids above the local pool) are skipped: each host re-carves
+    over *its* survivors.  The carving itself is ``largest_pow2_mesh``, so
+    a non-pow2 survivor count keeps every device the model width allows.
+    """
+    devs = list(devices) if devices is not None else jax.devices()
+    local = [devs[int(i)] for i in device_ids if 0 <= int(i) < len(devs)]
+    if not local:
+        raise ValueError(
+            f"reconfig pool {sorted(int(i) for i in device_ids)} has no "
+            f"local devices (process has {len(devs)})"
+        )
+    return largest_pow2_mesh(len(local), devices=local)
+
+
 # ---------------------------------------------------------------------------
 # Plan-driven submeshes (executable gap collocation — paper §5, TPU mode)
 # ---------------------------------------------------------------------------

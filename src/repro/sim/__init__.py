@@ -25,6 +25,7 @@ from repro.sim.trace import (
     TraceEvent,
     generate_failure_storm,
     generate_heartbeat_loss,
+    generate_lease_churn,
     generate_trace,
     load_trace,
     save_trace,
@@ -38,6 +39,7 @@ __all__ = [
     "TraceEvent",
     "generate_failure_storm",
     "generate_heartbeat_loss",
+    "generate_lease_churn",
     "generate_trace",
     "load_trace",
     "save_trace",

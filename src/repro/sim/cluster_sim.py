@@ -62,7 +62,14 @@ from repro.core.multiplex import (
     QoSMonitor,
 )
 from repro.dist.faults import HeartbeatMonitor, MitigationLog
-from repro.dist.transport import CoordinatorLoop, InProcessBus, WorkerClient
+from repro.dist.transport import (
+    HEARTBEAT_TOPIC,
+    RECONFIG_TOPIC,
+    CoordinatorLease,
+    CoordinatorLoop,
+    InProcessBus,
+    WorkerClient,
+)
 from repro.sim.trace import Trace
 
 
@@ -120,6 +127,11 @@ class SimReport:
     # when the trace carries heartbeat_loss events, and deterministic —
     # the CI gate pins the counts across replays
     mitigations: Dict[str, int] = field(default_factory=dict)
+    # coordinator failovers replayed through the real election path
+    # (lease_churn traces) and the per-topic retained log sizes at the end
+    # of the replay — with gc_every set these stay bounded across churns
+    n_failovers: int = 0
+    topic_backlog: Dict[str, int] = field(default_factory=dict)
     segments: List[Segment] = field(default_factory=list)
 
     @property
@@ -169,6 +181,8 @@ class ClusterSim:
         qos_bound: float = QOS_SLOWDOWN_BOUND,
         fg_job: str = "fg",
         hb_timeout: float = 5.0,
+        lease_timeout: float = 2.0,
+        gc_every: int = 0,
     ):
         self.trace = trace
         self.graph = graph
@@ -185,8 +199,16 @@ class ClusterSim:
         # failed by the CoordinatorLoop hb_timeout virtual seconds after
         # its last beat (a synthetic detection boundary is inserted there)
         self.hb_timeout = hb_timeout
+        # lease-churn traces run the real election: the coordinator role
+        # moves to the lowest survivor lease_timeout after the holder dies,
+        # and with gc_every > 0 each holder compacts the topics every
+        # that-many pumps (the backlog stays bounded across churns)
+        self.lease_timeout = lease_timeout
+        self.gc_every = gc_every
+        self._lease_mode = any(e.kind == "lease_churn" for e in trace.events)
         self._t = 0.0
         self._silent: set = set()
+        self._holder: Optional[int] = None
 
     # -- replay -------------------------------------------------------------
 
@@ -194,6 +216,7 @@ class ClusterSim:
         tr = self.trace
         self._t = 0.0
         self._silent = set()
+        self._holder = None
         coord = ClusterCoordinator(
             tr.n_devices, self.hw, clock=lambda: self._t,
             virtual_devices=True,
@@ -214,16 +237,39 @@ class ClusterSim:
         monitor = HeartbeatMonitor(tr.n_devices, timeout=self.hb_timeout,
                                    clock=lambda: self._t)
         mlog = MitigationLog()
-        cloop = CoordinatorLoop(bus, monitor, coordinator=coord, log=mlog)
+        cloop = CoordinatorLoop(bus, monitor, coordinator=coord, log=mlog,
+                                gc_every=self.gc_every)
         workers = {w: WorkerClient(bus, w) for w in range(tr.n_devices)}
+        # lease mode (the trace carries lease_churn events): the real
+        # election protocol arbitrates who pumps — every live worker ticks
+        # its CoordinatorLease each boundary, only the holder's loop runs.
+        # Worker 0 seeds the initial claim (lowest id, same as production).
+        leases: Dict[int, CoordinatorLease] = {}
+        n_failovers = 0
+        if self._lease_mode:
+            leases = {
+                w: CoordinatorLease(bus, w, timeout=self.lease_timeout,
+                                    clock=lambda: self._t)
+                for w in range(tr.n_devices)
+            }
+            assert leases[0].tick(), "worker 0 must win the seed election"
+            self._holder = 0
         # synthetic detection boundaries: a silenced device's loss becomes
-        # visible exactly hb_timeout after its last beat.  Merged stably
+        # visible exactly hb_timeout after its last beat; a dead lease
+        # holder triggers a failover boundary at t + lease_timeout and its
+        # own detection one hb_timeout after that (the new holder re-joined
+        # it with a fresh grace period during bootstrap).  Merged stably
         # (time, then trace order, events before detections at equal t) so
         # the replay stays deterministic.
         entries = [(e.t, 0, i, e) for i, e in enumerate(tr.events)]
         for i, e in enumerate(tr.events):
             if e.kind == "heartbeat_loss" and e.t + self.hb_timeout < horizon:
                 entries.append((e.t + self.hb_timeout, 1, i, None))
+            elif e.kind == "lease_churn":
+                for dt in (self.lease_timeout,
+                           self.lease_timeout + self.hb_timeout):
+                    if e.t + dt < horizon:
+                        entries.append((e.t + dt, 1, i, None))
         entries.sort(key=lambda x: (x[0], x[1], x[2]))
         segments: List[Segment] = []
         per_job: Dict[str, float] = {}
@@ -249,8 +295,35 @@ class ClusterSim:
             beat_round += 1
             for w in sorted(coord.healthy - self._silent):
                 if w in monitor.last:
+                    # consume pending reconfigs first so the beat carries a
+                    # current ack — the cursor aggregation GC feeds on these
+                    workers[w].poll_reconfig()
                     workers[w].beat(beat_round)
-            live_replans = cloop.pump()
+            live_replans: List[dict] = []
+            if self._lease_mode:
+                # election-gated pumping: ticking in id order means the
+                # live holder renews before anyone checks staleness, and
+                # after a churn the lowest survivor claims first and wins
+                for w in sorted(coord.healthy - self._silent):
+                    if not leases[w].tick():
+                        continue
+                    if leases[w].acquired and w != self._holder:
+                        # failover: a fresh loop on the new holder rebuilds
+                        # monitor/ack state from the topic log — adopting
+                        # (never re-firing) the old holder's mitigations
+                        monitor = HeartbeatMonitor(
+                            0, timeout=self.hb_timeout, clock=lambda: self._t
+                        )
+                        cloop = CoordinatorLoop(
+                            bus, monitor, coordinator=coord, log=mlog,
+                            gc_every=self.gc_every,
+                        )
+                        cloop.bootstrap_from_log()
+                        self._holder = w
+                        n_failovers += 1
+                    live_replans = cloop.pump()
+            else:
+                live_replans = cloop.pump()
             n_replans += len(live_replans)
             changed = bool(live_replans)
             if ev is not None:
@@ -283,6 +356,9 @@ class ClusterSim:
             per_job_service=per_job,
             mitigations={k: mlog.count(k) for k in sorted(
                 {e["kind"] for e in mlog.events})},
+            n_failovers=n_failovers,
+            topic_backlog={t: bus.backlog(t) for t in
+                           (HEARTBEAT_TOPIC, RECONFIG_TOPIC)},
             segments=segments if keep_segments else [],
         )
 
@@ -325,6 +401,17 @@ class ClusterSim:
             if ev.device not in coord.healthy or ev.device in self._silent:
                 return False, 0
             self._silent.add(ev.device)
+            return False, 0
+        if ev.kind == "lease_churn":
+            # the coordinator host dies NOW: its beats *and* lease renewals
+            # stop.  Election (lowest survivor claims) happens at the
+            # t + lease_timeout synthetic boundary; the dead ex-holder's
+            # device loss is detected one hb_timeout after the new holder
+            # re-joined it during bootstrap
+            h = self._holder
+            if h is None or h in self._silent or h not in coord.healthy:
+                return False, 0
+            self._silent.add(h)
             return False, 0
         raise ValueError(f"unknown trace event kind: {ev.kind!r}")
 

@@ -2,7 +2,7 @@
 
 A trace is the replayable input of the cluster simulator
 (``repro.sim.cluster_sim``): a device count plus a time-ordered list of
-events drawn from five kinds —
+events drawn from six kinds —
 
   job_arrival     a background job enters the cluster
                   (fields: job, priority, weight, quantum)
@@ -18,6 +18,16 @@ events drawn from five kinds —
                   beats (``HeartbeatMonitor.failed()`` at t + hb_timeout)
                   and fire ``handle_failure`` itself — the same
                   consumption path the live train loop runs.
+  lease_churn     the worker currently holding the coordinator lease dies
+                  at t (no ``device`` field — the victim is resolved at
+                  replay time, it is whoever holds the lease then).  The
+                  simulator replays this through the real election path:
+                  the holder goes silent, its lease renewals stop, and at
+                  t + lease_timeout the lowest surviving worker claims the
+                  next lease epoch, reconstructs coordinator state from
+                  the topic log (``CoordinatorLoop.bootstrap_from_log``)
+                  and resumes pumping; the dead ex-holder is then
+                  *detected* from missing beats like any other loss.
 
 Trace JSON schema (version 1)::
 
@@ -48,7 +58,7 @@ from dataclasses import asdict, dataclass, field
 from typing import List, Optional
 
 EVENT_KINDS = ("job_arrival", "job_departure", "device_failure",
-               "device_join", "heartbeat_loss")
+               "device_join", "heartbeat_loss", "lease_churn")
 
 
 @dataclass(frozen=True)
@@ -235,6 +245,39 @@ def generate_heartbeat_loss(
         t += rng.uniform(0.0, horizon * 0.05)
         events.append(TraceEvent(t=round(t, 6), kind="heartbeat_loss",
                                  device=dev))
+    return Trace(n_devices=n_devices, events=_sorted(events), seed=seed,
+                 horizon=horizon)
+
+
+def generate_lease_churn(
+    n_devices: int,
+    seed: int = 0,
+    *,
+    horizon: float = 120.0,
+    n_churns: int = 3,
+    n_jobs: int = 2,
+) -> Trace:
+    """A lease-churn trace: the coordinator host dies ``n_churns`` times.
+
+    Each ``lease_churn`` event kills whichever worker holds the lease at
+    replay time (the events carry no device — churn 2 kills whoever won
+    the failover after churn 1), so ``n_churns`` successive failovers each
+    elect the lowest survivor and shrink the pool by one.  Churns are
+    spread evenly with a small seeded jitter, leaving room between them
+    for the failover (lease timeout) *and* the subsequent detection of the
+    dead ex-holder (heartbeat timeout) to complete; ``n_jobs`` background
+    jobs give the rebuilt admission state a roster to re-decide."""
+    rng = random.Random(seed)
+    events: List[TraceEvent] = [
+        TraceEvent(t=float(1 + i), kind="job_arrival", job=f"bg{i:03d}",
+                   priority=1, weight=1.0, quantum=1)
+        for i in range(n_jobs)
+    ]
+    for i in range(n_churns):
+        t = horizon * (0.15 + 0.6 * i / max(1, n_churns - 1)
+                       if n_churns > 1 else 0.3)
+        t += rng.uniform(0.0, horizon * 0.02)
+        events.append(TraceEvent(t=round(t, 6), kind="lease_churn"))
     return Trace(n_devices=n_devices, events=_sorted(events), seed=seed,
                  horizon=horizon)
 

@@ -1,0 +1,343 @@
+"""Two-process jax.distributed harness: KVStoreTransport end-to-end.
+
+The one place the real multi-host control plane runs against a real
+``jax.distributed.initialize()`` coordination service instead of the
+dict-backed fake — two processes on localhost, CPU only, each with 4
+forced host devices, sharing an 8-worker virtual pool:
+
+  process 0  owns virtual workers {0, 1, 2} (worker 3 of its 4 local
+             devices stays spare).  It is the SURVIVOR: it beats its
+             workers, watches the lease, and after the coordinator host
+             dies it must win the election, bootstrap coordinator state
+             from the KV topic log, detect the dead workers, re-plan onto
+             the exact non-pow2 survivor pool and re-carve a real mesh.
+             It also hosts the jax coordination service (the KV store must
+             outlive the kill, so the DOOMED process cannot host it).
+  process 1  owns virtual workers {3, 4, 5, 6, 7} and initially holds the
+             coordinator lease (it seeds the first claim before process 0
+             starts ticking).  Worker 7 never beats — the coordinator must
+             *detect* that loss live over the KV transport (churn 1);
+             then worker 6 is silenced (churn 2); then the whole process
+             force-kills itself via os._exit, taking workers 3-5 and the
+             coordinator role with it (churn 3 — the failover).
+
+Assertions (driver-side, on the survivor's output):
+
+  * churn 1 + 2: each silent worker is detected from missing beats and
+    re-planned exactly once — reconfig events with devices [0..6] then
+    [0..5] arrive at the survivor through the KV store,
+  * failover: the survivor's lease tick claims the next epoch, exactly one
+    ``coordinator_failover`` bootstrap runs, and the bootstrap adopts the
+    old holder's last pool [0..5] — workers 6 and 7 are NEVER re-detected
+    (no double-fired mitigations),
+  * churn 3: workers 3, 4, 5 are detected by the new holder, the final
+    pool is exactly {0, 1, 2} (non-pow2) and the survivor re-carves a
+    real 3-device mesh over its local devices (through ``remesh_for_pool``
+    + the ``ExecutableCache``) and runs a jitted computation on it,
+  * GC: per-pump compaction keeps the KV heartbeat backlog bounded across
+    all three churn cycles (low-water advanced, retained keys small).
+
+Run directly (the CI tier1-multihost job does)::
+
+    python tests/multihost/run_two_proc.py
+
+Exit code 0 = all assertions passed.  The whole run finishes in well
+under the coordination service's own ~100 s dead-client detection, so the
+surviving process never trips on the runtime noticing the kill.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import socket
+import subprocess
+import sys
+import time
+
+SRC = os.path.join(os.path.dirname(os.path.abspath(__file__)), "..", "..",
+                   "src")
+
+HB_TIMEOUT = 2.0      # monitor: silent worker declared dead after this
+LEASE_TIMEOUT = 3.0   # lease: holder declared dead after this
+BEAT_PERIOD = 0.1
+NS = "mh-harness"
+N_VIRTUAL = 8
+P0_WORKERS = (0, 1, 2)
+P1_WORKERS = (3, 4, 5, 6)   # worker 7 exists in the pool but never beats
+DEADLINE = 90.0
+
+
+def _log(role: int, msg: str) -> None:
+    print(f"P{role} {msg}", flush=True)
+
+
+def _init(role: int, port: int):
+    import jax
+
+    jax.distributed.initialize(
+        coordinator_address=f"localhost:{port}",
+        num_processes=2,
+        process_id=role,
+    )
+    assert len(jax.local_devices()) == 4, jax.local_devices()
+    from repro.dist.transport import KVStoreTransport
+
+    return KVStoreTransport(NS, uid=f"p{role}")
+
+
+def _kv_client():
+    from jax._src import distributed
+
+    return distributed.global_state.client
+
+
+def _sync_set(key: str) -> None:
+    _kv_client().key_value_set(f"{NS}/sync/{key}", "1")
+
+
+def _sync_wait(key: str, timeout_s: float = 30.0) -> None:
+    _kv_client().blocking_key_value_get(f"{NS}/sync/{key}",
+                                        int(timeout_s * 1000))
+
+
+# ---------------------------------------------------------------------------
+# process 1: initial coordinator host — detects two losses, then dies hard
+# ---------------------------------------------------------------------------
+
+
+def run_coordinator(port: int) -> None:
+    transport = _init(1, port)
+    from repro.configs.vgg16 import CONFIG as VCFG
+    from repro.core.coordinator import ClusterCoordinator, Job
+    from repro.dist.faults import HeartbeatMonitor, MitigationLog
+    from repro.dist.transport import CoordinatorLease, CoordinatorLoop, \
+        WorkerClient
+    from repro.models.graph import build_vgg_graph
+
+    coord = ClusterCoordinator(N_VIRTUAL, virtual_devices=True)
+    coord.submit_foreground(
+        Job("fg", "foreground", build_vgg_graph(VCFG, 32), amp_limit=1.5)
+    )
+    monitor = HeartbeatMonitor(N_VIRTUAL, timeout=HB_TIMEOUT)
+    mlog = MitigationLog()
+    cloop = CoordinatorLoop(transport, monitor, coordinator=coord, log=mlog,
+                            gc_every=1)
+    lease = CoordinatorLease(transport, worker_id=3, timeout=LEASE_TIMEOUT)
+    lease.claim()                  # seed the initial holder deterministically
+    assert lease.tick(), "seed claim must win"
+    _sync_set("lease-seeded")
+    workers = {w: WorkerClient(transport, w) for w in P1_WORKERS}
+
+    silenced: set = set()
+    replans = 0
+    t0 = time.monotonic()
+    while time.monotonic() - t0 < DEADLINE:
+        for w in P1_WORKERS:
+            if w not in silenced:
+                workers[w].poll_reconfig()   # ack -> reconfig GC can advance
+                workers[w].beat(int((time.monotonic() - t0) / BEAT_PERIOD))
+        assert lease.tick(), "nobody can contest a renewed lease"
+        for ev in cloop.pump():
+            replans += 1
+            _log(1, f"REPLAN devices={ev['devices']}")
+            if replans == 1:
+                # churn 1 handled (worker 7 detected) -> silence worker 6
+                assert ev["devices"] == [0, 1, 2, 3, 4, 5, 6], ev
+                silenced.add(6)
+            elif replans == 2:
+                # churn 2 handled (worker 6 detected) -> die without any
+                # cleanup: no distributed shutdown, no lease release, no
+                # atexit — the forced-kill the failover path must survive
+                assert ev["devices"] == [0, 1, 2, 3, 4, 5], ev
+                _log(1, "DYING")
+                os._exit(42)
+        time.sleep(BEAT_PERIOD)
+    raise SystemExit("coordinator never reached the kill point")
+
+
+# ---------------------------------------------------------------------------
+# process 0: the survivor — wins the lease, bootstraps, re-carves its mesh
+# ---------------------------------------------------------------------------
+
+
+def run_survivor(port: int) -> None:
+    transport = _init(0, port)
+    import jax
+
+    from repro.configs.vgg16 import CONFIG as VCFG
+    from repro.core.coordinator import ClusterCoordinator, Job
+    from repro.core.multiplex import ExecutableCache
+    from repro.dist.faults import HeartbeatMonitor, MitigationLog
+    from repro.dist.transport import (
+        HEARTBEAT_TOPIC,
+        CoordinatorLease,
+        CoordinatorLoop,
+        WorkerClient,
+    )
+    from repro.launch.mesh import remesh_for_pool
+    from repro.models.graph import build_vgg_graph
+
+    _sync_wait("lease-seeded")
+    lease = CoordinatorLease(transport, worker_id=0, timeout=LEASE_TIMEOUT)
+    workers = {w: WorkerClient(transport, w) for w in P0_WORKERS}
+
+    cloop = None
+    mlog = MitigationLog()
+    pool = None
+    failovers = 0
+    t0 = time.monotonic()
+    while time.monotonic() - t0 < DEADLINE:
+        for w in P0_WORKERS:
+            for ev in workers[w].poll_reconfig():
+                if w == 0 and ev.get("action") == "replan":
+                    pool = [int(d) for d in ev["devices"]]
+                    _log(0, f"RECONFIG devices={pool}")
+            workers[w].beat(int((time.monotonic() - t0) / BEAT_PERIOD))
+        if lease.tick():
+            if lease.acquired:
+                # failover: fresh coordinator-side state, rebuilt from the
+                # topic log (restore_pool adopts the dead holder's last
+                # published pool; NO mitigations re-fire for it)
+                failovers += 1
+                coord = ClusterCoordinator(N_VIRTUAL, virtual_devices=True)
+                coord.submit_foreground(Job(
+                    "fg", "foreground", build_vgg_graph(VCFG, 32),
+                    amp_limit=1.5,
+                ))
+                monitor = HeartbeatMonitor(0, timeout=HB_TIMEOUT)
+                cloop = CoordinatorLoop(transport, monitor, coordinator=coord,
+                                        log=mlog, gc_every=1)
+                info = cloop.bootstrap_from_log()
+                _log(0, f"FAILOVER epoch={lease.epoch} "
+                        f"pool={info['pool']}")
+            cloop.pump()
+        if pool == [0, 1, 2]:
+            break
+        time.sleep(BEAT_PERIOD)
+    # -- the acceptance assertions -----------------------------------------
+    assert failovers == 1, f"expected exactly one failover, got {failovers}"
+    assert pool == [0, 1, 2], f"never re-planned to the survivor pool: {pool}"
+    detected = sorted(e["worker"] for e in mlog.events
+                      if e["kind"] == "failure_detected")
+    # workers 6 and 7 were handled by the OLD holder — re-detecting them
+    # after failover would be a double-fired mitigation
+    assert detected == [3, 4, 5], f"double-fired or missed: {detected}"
+    assert mlog.count("coordinator_failover") == 1
+    # GC kept the heartbeat key log bounded across all three churn cycles
+    lw = transport.low_water(HEARTBEAT_TOPIC)
+    backlog = len(transport.poll(HEARTBEAT_TOPIC, lw))
+    assert lw > 0, "heartbeat topic was never compacted"
+    assert backlog <= 64, f"unbounded heartbeat backlog: {backlog}"
+    _log(0, f"GC lw={lw} backlog={backlog}")
+    # re-carve a REAL mesh over the survivor pool and run on it: the ids
+    # map positionally onto this process's local devices
+    cache = ExecutableCache()
+    mesh = remesh_for_pool(pool, devices=jax.local_devices())
+    assert len(mesh.devices.flat) == 3, mesh  # non-pow2 pool kept whole
+    key = ExecutableCache.key("harness-step", mesh)
+
+    def build():
+        import jax.numpy as jnp
+        from jax.sharding import NamedSharding, PartitionSpec as P
+
+        sh = NamedSharding(mesh, P("data"))
+        return jax.jit(lambda x: (x * 2).sum(), in_shardings=sh)
+
+    fn = cache.get_or_build(key, build)
+    import jax.numpy as jnp
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    x = jax.device_put(jnp.arange(12.0),
+                       NamedSharding(mesh, P("data")))
+    assert float(fn(x)) == 132.0
+    assert cache.get_or_build(key, build) is fn  # cache hit on re-carve
+    _log(0, f"REMESH devices={[d.id for d in mesh.devices.flat]} "
+            f"shape={tuple(mesh.devices.shape)}")
+    _log(0, "HARNESS OK")
+    # skip jax's atexit distributed shutdown: its barrier would wait on the
+    # killed peer, notice the heartbeat timeout and terminate us fatally —
+    # everything is validated, leave without touching the dead runtime
+    sys.stdout.flush()
+    os._exit(0)
+
+
+# ---------------------------------------------------------------------------
+# driver
+# ---------------------------------------------------------------------------
+
+
+def _free_port() -> int:
+    s = socket.socket()
+    s.bind(("localhost", 0))
+    port = s.getsockname()[1]
+    s.close()
+    return port
+
+
+def main() -> int:
+    port = _free_port()
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+    env["JAX_PLATFORMS"] = "cpu"
+    env["PYTHONPATH"] = SRC + os.pathsep + env.get("PYTHONPATH", "")
+    here = os.path.abspath(__file__)
+    procs = [
+        subprocess.Popen(
+            [sys.executable, here, "--role", str(role), "--port", str(port)],
+            env=env, stdout=subprocess.PIPE, stderr=subprocess.STDOUT,
+            text=True,
+        )
+        for role in (0, 1)
+    ]
+    outs = []
+    try:
+        for p in procs:
+            out, _ = p.communicate(timeout=DEADLINE + 60)
+            outs.append(out)
+    except subprocess.TimeoutExpired:
+        for p in procs:
+            p.kill()
+        for p in procs:
+            outs.append(p.communicate()[0] or "")
+        print("\n".join(outs))
+        print("TIMEOUT")
+        return 1
+    p0_out, p1_out = outs
+    print(p1_out)
+    print(p0_out)
+    ok = True
+
+    def check(cond: bool, what: str) -> None:
+        nonlocal ok
+        print(f"{'OK  ' if cond else 'FAIL'} {what}")
+        ok &= cond
+
+    check(procs[1].returncode == 42, "coordinator died via forced kill")
+    check(procs[0].returncode == 0, "survivor exited clean")
+    check("REPLAN devices=[0, 1, 2, 3, 4, 5, 6]" in p1_out,
+          "churn 1: worker 7 detected over the KV transport")
+    check("REPLAN devices=[0, 1, 2, 3, 4, 5]" in p1_out,
+          "churn 2: worker 6 detected, then forced kill")
+    check("FAILOVER" in p0_out and "pool=[0, 1, 2, 3, 4, 5]" in p0_out,
+          "survivor won the lease and adopted the dead holder's pool")
+    check("RECONFIG devices=[0, 1, 2]" in p0_out,
+          "churn 3: re-planned onto the exact non-pow2 survivor pool")
+    check("REMESH devices=[0, 1, 2] shape=(3, 1)" in p0_out,
+          "mesh actually re-carved over the survivors")
+    check("HARNESS OK" in p0_out, "all survivor-side assertions held")
+    print(f"two-process harness: {'OK' if ok else 'FAIL'}")
+    return 0 if ok else 1
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--role", type=int, default=None)
+    ap.add_argument("--port", type=int, default=None)
+    args = ap.parse_args()
+    if args.role is None:
+        sys.exit(main())
+    elif args.role == 1:
+        run_coordinator(args.port)
+    else:
+        run_survivor(args.port)  # exits via os._exit(0)

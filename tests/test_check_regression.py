@@ -1,0 +1,83 @@
+"""Unit tests for the trajectory regression gate (benchmarks/check_regression)."""
+import json
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..",
+                                "benchmarks"))
+
+from check_regression import check, goodput_at, load_records, main  # noqa: E402
+
+
+def _rec(g512, g1024=None):
+    curve = [{"devices": 128, "multi_task_goodput": 40.0},
+             {"devices": 512, "multi_task_goodput": g512}]
+    if g1024 is not None:
+        curve.append({"devices": 1024, "multi_task_goodput": g1024})
+    return {"curve": curve}
+
+
+def test_goodput_at_reads_curve_points():
+    r = _rec(100.0, 200.0)
+    assert goodput_at(r, 512) == 100.0
+    assert goodput_at(r, 1024) == 200.0
+    assert goodput_at(r, 2048) is None
+    assert goodput_at({"curve": []}, 512) is None
+
+
+def test_single_record_passes_trivially():
+    ok, rows = check([_rec(100.0, 200.0)])
+    assert ok is True and rows == []
+    ok, rows = check([])
+    assert ok is True and rows == []
+
+
+def test_fresh_within_threshold_passes():
+    ok, rows = check([_rec(100.0, 200.0), _rec(85.0, 170.0)])
+    assert ok is True
+    assert [r["devices"] for r in rows] == [512, 1024]
+    assert all(r["ok"] for r in rows)
+
+
+def test_drop_beyond_threshold_fails_per_scale():
+    # 512 drops 30% (fails), 1024 holds (passes)
+    ok, rows = check([_rec(100.0, 200.0), _rec(70.0, 190.0)])
+    assert ok is False
+    by_dev = {r["devices"]: r for r in rows}
+    assert by_dev[512]["ok"] is False
+    assert by_dev[1024]["ok"] is True
+
+
+def test_baseline_is_best_earlier_point_not_last():
+    # trajectory dipped in the middle: the baseline is the MAX of the
+    # earlier records, so a fresh point matching the dip still fails
+    ok, rows = check([_rec(100.0), _rec(60.0), _rec(65.0)])
+    assert ok is False
+    assert rows[0]["baseline"] == 100.0 and rows[0]["fresh"] == 65.0
+
+
+def test_missing_scale_is_skipped_not_failed():
+    # earlier records never measured 1024: only 512 is gated
+    ok, rows = check([_rec(100.0), _rec(95.0, 300.0)])
+    assert ok is True
+    assert [r["devices"] for r in rows] == [512]
+
+
+def test_cli_round_trip_and_exit_codes(tmp_path):
+    p = tmp_path / "traj.json"
+    p.write_text(json.dumps([_rec(100.0, 200.0), _rec(95.0, 190.0)]))
+    assert main(["--file", str(p)]) == 0
+    p.write_text(json.dumps([_rec(100.0, 200.0), _rec(50.0, 190.0)]))
+    assert main(["--file", str(p)]) == 1
+    # custom threshold rescues the same data
+    assert main(["--file", str(p), "--threshold", "0.4"]) == 0
+    assert load_records(str(p))[0]["curve"][0]["devices"] == 128
+
+
+def test_committed_trajectory_passes_the_gate():
+    """The repo's own committed trajectory must be green under the gate
+    that CI enforces."""
+    path = os.path.join(os.path.dirname(__file__), "..",
+                        "BENCH_cluster_sim.json")
+    ok, rows = check(load_records(path))
+    assert ok is True, rows

@@ -24,6 +24,7 @@ from repro.sim import (
     TraceEvent,
     generate_failure_storm,
     generate_heartbeat_loss,
+    generate_lease_churn,
     generate_trace,
     load_trace,
     save_trace,
@@ -228,4 +229,87 @@ def test_committed_heartbeat_loss_trace_gates_mitigations():
     assert rep.mitigations["replan"] == n_losses
     assert rep.segments[-1].n_healthy == 128 - n_losses
     assert rep.segments[-1].plan_gpus == 128 - n_losses
+    assert rep.mean_fg_slowdown <= 1.33 + 1e-9
+
+
+# -- lease-churn traces: coordinator election / failover ----------------------
+
+
+def test_lease_churn_generator_deterministic_and_well_formed(tmp_path):
+    a = generate_lease_churn(64, seed=5, n_churns=3, n_jobs=2)
+    b = generate_lease_churn(64, seed=5, n_churns=3, n_jobs=2)
+    assert a.to_json() == b.to_json()
+    churns = [e for e in a.events if e.kind == "lease_churn"]
+    assert len(churns) == 3
+    # no victim device in the trace: the victim is whoever HOLDS the lease
+    # at replay time, so the same trace exercises a churn chain
+    assert all(e.device is None for e in churns)
+    assert sum(1 for e in a.events if e.kind == "job_arrival") == 2
+    ts = [e.t for e in a.events]
+    assert ts == sorted(ts)
+    p = tmp_path / "lc.json"
+    save_trace(a, p)
+    assert load_trace(p).to_json() == a.to_json()
+
+
+def test_lease_churn_replays_real_failover_path():
+    """Each churn kills the CURRENT lease holder: the lowest survivor wins
+    the election lease_timeout later (fresh loop, bootstrap_from_log — the
+    old holder's mitigations are adopted, never re-fired), and the dead
+    ex-holder's device loss is then DETECTED by the new holder's pump one
+    hb_timeout after its bootstrap re-join.  Counts are exact: one
+    failover + one detection + one replan per churn, and GC keeps the
+    topic backlog bounded across the whole chain."""
+    tr = generate_lease_churn(16, seed=3, n_churns=3, n_jobs=2)
+    rep = _sim(tr, hb_timeout=5.0, lease_timeout=2.0, gc_every=1).run()
+    assert rep.n_failovers == 3
+    assert rep.mitigations["coordinator_failover"] == 3
+    assert rep.mitigations["failure_detected"] == 3
+    assert rep.mitigations["replan"] == 3
+    assert rep.n_replans == 3
+    assert rep.segments[-1].n_healthy == 13
+    assert rep.segments[-1].plan_gpus == 13  # exact survivors, non-pow2
+    # election lands lease_timeout after each churn; the ex-holder's
+    # detection one hb_timeout after that — both are segment boundaries
+    bounds = {round(s.t0, 6) for s in rep.segments}
+    for e in tr.events:
+        if e.kind == "lease_churn":
+            assert round(e.t + 2.0, 6) in bounds
+            assert round(e.t + 7.0, 6) in bounds
+    assert sum(rep.topic_backlog.values()) <= 4  # GC bounded the logs
+    # bit-identical replay
+    rep2 = _sim(tr, hb_timeout=5.0, lease_timeout=2.0, gc_every=1).run()
+    assert rep.to_json(with_segments=True) == rep2.to_json(with_segments=True)
+
+
+def test_lease_churn_without_gc_grows_backlog():
+    """Negative control for the GC satellite: the same churn trace with
+    gc_every=0 retains every beat — the backlog the compaction path is
+    there to bound."""
+    tr = generate_lease_churn(16, seed=3, n_churns=3, n_jobs=2)
+    rep = _sim(tr, hb_timeout=5.0, lease_timeout=2.0, gc_every=0).run()
+    assert rep.n_failovers == 3  # failover itself does not need GC
+    assert sum(rep.topic_backlog.values()) > 50
+
+
+def test_committed_lease_churn_trace_gates_failovers():
+    """The checked-in lease-churn trace replays deterministically through
+    the election path at 128 devices — the cluster-sim CI gate's tier-1
+    counterpart."""
+    import os
+
+    path = os.path.join(os.path.dirname(__file__), "..", "benchmarks",
+                        "traces", "lease_churn_128.json")
+    tr = load_trace(path)
+    assert tr.n_devices == 128
+    n_churns = sum(1 for e in tr.events if e.kind == "lease_churn")
+    assert n_churns == 3
+    rep = _sim(tr, lease_timeout=2.0, gc_every=1).run()
+    assert rep.n_failovers == 3
+    assert rep.mitigations["coordinator_failover"] == 3
+    assert rep.mitigations["failure_detected"] == 3
+    assert rep.mitigations["replan"] == 3
+    assert rep.segments[-1].n_healthy == 125
+    assert rep.segments[-1].plan_gpus == 125
+    assert sum(rep.topic_backlog.values()) <= 4
     assert rep.mean_fg_slowdown <= 1.33 + 1e-9

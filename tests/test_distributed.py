@@ -143,3 +143,64 @@ def test_dryrun_cell_small():
     flops, fwd = [float(x) for x in out.strip().split()[1:]]
     assert flops >= fwd * 2.0  # at least fwd+bwd, trip-aware
     assert flops <= fwd * 8.0
+
+
+def test_applied_reconfig_recarves_mesh_mid_run():
+    """Applied reconfiguration end-to-end under a forced 8-device host:
+    four phantom workers go silent together, the co-hosted loop re-plans
+    down to the 4 survivors, and at the next epoch boundary the worker
+    actually re-carves its mesh onto the surviving pool (one remesh — the
+    latest event wins over the intermediate 7/6/5-device re-plans), then
+    finishes every step on the new carving."""
+    out = _run("""
+        import dataclasses, jax
+        from repro.configs import TRAIN_4K, get_config
+        from repro.configs.vgg16 import CONFIG as VCFG
+        from repro.core.coordinator import ClusterCoordinator, Job
+        from repro.dist.faults import HeartbeatMonitor
+        from repro.dist.transport import (CoordinatorLoop, WorkerClient,
+                                          fake_transport_pair)
+        from repro.launch.mesh import make_mesh
+        from repro.models.graph import build_vgg_graph
+        from repro.train.loop import TrainConfig, train
+
+        clk = {"t": 0.0}
+        worker_end, coord_end = fake_transport_pair()
+        coord = ClusterCoordinator(8, clock=lambda: clk["t"],
+                                   virtual_devices=True)
+        coord.submit_foreground(Job("fg", "foreground",
+                                    build_vgg_graph(VCFG, 32),
+                                    amp_limit=1.5))
+        mon = HeartbeatMonitor(1, timeout=5.0, clock=lambda: clk["t"])
+        loop = CoordinatorLoop(coord_end, mon, coordinator=coord)
+        # four phantoms (4..7) beat once, then go silent: they time out
+        # TOGETHER, so one pump publishes the whole re-plan chain and the
+        # worker applies only the last pool [0..3]
+        for w in (4, 5, 6, 7):
+            WorkerClient(worker_end, w).beat(0)
+
+        def advance_clock(step):
+            clk["t"] = float(step)
+
+        cfg = get_config("qwen2-1.5b").reduced()
+        shape = dataclasses.replace(TRAIN_4K, seq_len=64, global_batch=8,
+                                    name="smoke")
+        tc = TrainConfig(steps=12, coordinator=coord, heartbeat=mon,
+                         transport=worker_end, control_loop=loop,
+                         apply_reconfig=True)
+        report = train(cfg, shape, make_mesh(8, 1), tc,
+                       fault_injector=advance_clock)
+        assert report.steps_done == 12
+        assert report.mitigations.count("join") == 4
+        assert report.mitigations.count("failure_detected") == 4
+        assert report.mitigations.count("replan") == 4
+        assert report.mitigations.count("reconfig") == 4
+        assert report.remeshes == 1  # latest event wins: ONE re-carve
+        ev = next(e for e in report.mitigations.events
+                  if e["kind"] == "reconfig_applied")
+        assert ev["mesh_devices"] == 4 and ev["gpus"] == 4
+        assert coord.healthy == {0, 1, 2, 3}
+        assert all(l == l for l in report.losses)  # finite across re-shard
+        print("REMESHES", report.remeshes, report.steps_done)
+        """)
+    assert "REMESHES 1 12" in out

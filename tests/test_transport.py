@@ -17,7 +17,9 @@ from repro.core.coordinator import ClusterCoordinator, Job
 from repro.dist.faults import HeartbeatMonitor, MitigationLog
 from repro.dist.transport import (
     HEARTBEAT_TOPIC,
+    LEASE_TOPIC,
     RECONFIG_TOPIC,
+    CoordinatorLease,
     CoordinatorLoop,
     InProcessBus,
     KVStoreTransport,
@@ -71,13 +73,23 @@ def test_fake_pair_disconnect_drops_publishes_silently():
 
 
 class _FakeKVClient:
-    """Dict-backed stand-in for jax's DistributedRuntimeClient KV surface."""
+    """Dict-backed stand-in for jax's DistributedRuntimeClient KV surface.
+
+    Mirrors the real coordination-service semantics the two-process harness
+    exercises: keys are write-once unless ``allow_overwrite`` is passed
+    (the real service raises ALREADY_EXISTS), and deletion is explicit.
+    """
 
     def __init__(self):
         self.store = {}
 
-    def key_value_set(self, key, value):
+    def key_value_set(self, key, value, allow_overwrite=False):
+        if key in self.store and not allow_overwrite:
+            raise RuntimeError(f"Config key {key} already exists.")
         self.store[key] = value
+
+    def key_value_delete(self, key):
+        self.store.pop(key, None)
 
     def key_value_dir_get(self, prefix):
         return [(k, v) for k, v in self.store.items() if k.startswith(prefix)]
@@ -103,6 +115,134 @@ def test_kvstore_transport_requires_jax_distributed():
     # no injected client + jax.distributed never initialized -> hard error
     with pytest.raises(RuntimeError):
         KVStoreTransport("test")
+
+
+# -- compaction / low-water GC contract --------------------------------------
+
+
+def _transport_impls():
+    """(name, factory) for all three implementations: factory() -> two
+    endpoints over one shared store (same object for the bus)."""
+    def bus():
+        b = InProcessBus()
+        return b, b
+
+    def fake():
+        return fake_transport_pair()
+
+    def kv():
+        client = _FakeKVClient()
+        return (KVStoreTransport("par", client=client, uid="host0-1"),
+                KVStoreTransport("par", client=client, uid="host1-1"))
+
+    return [("inprocess", bus), ("fake", fake), ("kvstore", kv)]
+
+
+@pytest.mark.parametrize("name,factory", _transport_impls(),
+                         ids=[n for n, _ in _transport_impls()])
+def test_compact_contract_parity(name, factory):
+    """The GC contract behaves identically across all three transports:
+    compaction drops seq < upto, survivors KEEP their numbers, low_water
+    tracks, compaction is monotone + clamped, and a fresh consumer starting
+    at low_water sees exactly the retained tail."""
+    a, b = factory()
+    for i in range(6):
+        a.publish("t", {"i": i})
+    assert a.low_water("t") == 0
+    assert a.compact("t", 4) == 4
+    assert a.low_water("t") == 4
+    # survivors keep their sequence numbers — no renumbering
+    assert [(s, p["i"]) for s, p in a.poll("t", since=4)] == [(4, 4), (5, 5)]
+    # monotone: compacting backwards is a no-op
+    assert a.compact("t", 2) == 4
+    # clamped: never past the head
+    assert a.compact("t", 99) == 6
+    assert a.poll("t", since=6) == []
+    a.publish("t", {"i": 6})
+    assert [(s, p["i"]) for s, p in a.poll("t", since=6)] == [(6, 6)]
+    # the OTHER endpoint agrees on low_water and the retained tail
+    assert b.low_water("t") == 6
+    assert [(s, p["i"]) for s, p in b.poll("t", since=b.low_water("t"))] \
+        == [(6, 6)]
+
+
+def test_fake_endpoint_asserts_no_read_below_low_water():
+    """The fake transport's CI tripwire: polling below the compacted
+    low-water mark means a consumer would silently miss messages on the
+    real KV store — the fake raises instead."""
+    w, c = fake_transport_pair()
+    for i in range(4):
+        w.publish("t", {"i": i})
+    assert c.poll("t", since=0)  # fine before compaction
+    c.compact("t", 3)
+    with pytest.raises(RuntimeError, match="low-water"):
+        c.poll("t", since=1)
+    with pytest.raises(RuntimeError, match="low-water"):
+        c.poll("t", since=0)  # a stale consumer restarting from scratch
+    # polling from the mark (or later) is the sanctioned resume point
+    assert [p["i"] for _s, p in c.poll("t", since=c.low_water("t"))] == [3]
+
+
+def test_kvstore_compact_preserves_lexicographic_order():
+    """Multi-publisher KV topic: compaction deletes the first keys in
+    lexicographic order, survivors keep both their relative order and
+    their sequence numbers, and the persisted low-water mark seeds fresh
+    consumers past the hole."""
+    client = _FakeKVClient()
+    a = KVStoreTransport("gc", client=client, uid="host0-1")
+    b = KVStoreTransport("gc", client=client, uid="host1-1")
+    a.publish("hb", {"w": 0, "n": 0})   # key 000000000000.host0-1
+    b.publish("hb", {"w": 1, "n": 0})   # key 000000000000.host1-1
+    a.publish("hb", {"w": 0, "n": 1})   # key 000000000001.host0-1
+    b.publish("hb", {"w": 1, "n": 1})   # key 000000000001.host1-1
+    order = [(p["w"], p["n"]) for _s, p in a.poll("hb")]
+    assert order == [(0, 0), (1, 0), (0, 1), (1, 1)]
+    assert a.compact("hb", 2) == 2
+    # exactly the first two keys (lexicographically) are gone from the dir
+    left = sorted(k for k in client.store if k.startswith("gc/hb/"))
+    assert left == ["gc/hb/000000000001.host0-1", "gc/hb/000000000001.host1-1"]
+    # the compactor's own numbering is unchanged for survivors
+    assert [(s, p["w"], p["n"]) for s, p in a.poll("hb")] \
+        == [(2, 0, 1), (3, 1, 1)]
+    # a FRESH consumer seeds its numbering at the persisted low-water mark:
+    # same absolute seqs for the same keys (single source of truth)
+    c = KVStoreTransport("gc", client=client, uid="host2-1")
+    assert c.low_water("hb") == 2
+    assert [(s, p["w"], p["n"]) for s, p in c.poll("hb", since=2)] \
+        == [(2, 0, 1), (3, 1, 1)]
+
+
+def test_kvstore_cursor_monotone_under_concurrent_publish():
+    """A slow publisher's small-counter key lands 'in the middle' of the
+    lexicographic order after the consumer already numbered later keys.
+    Stable per-consumer assignment gives it the NEXT seq instead of
+    renumbering: a cursor-driven consumer never skips and never re-reads."""
+    client = _FakeKVClient()
+    fast = KVStoreTransport("cc", client=client, uid="host0-1")
+    slow = KVStoreTransport("cc", client=client, uid="host1-1")
+    consumer = KVStoreTransport("cc", client=client, uid="host2-1")
+    fast.publish("hb", {"m": "f0"})
+    fast.publish("hb", {"m": "f1"})
+    seen = {}
+    cursor = 0
+    for seq, p in consumer.poll("hb", cursor):
+        seen[seq] = p["m"]
+        cursor = seq + 1
+    assert seen == {0: "f0", 1: "f1"}
+    # the slow publisher now flushes counter-0 keys that sort BEFORE f1's
+    slow.publish("hb", {"m": "s0"})
+    slow.publish("hb", {"m": "s1"})
+    for seq, p in consumer.poll("hb", cursor):
+        assert seq not in seen, "re-read after renumbering"
+        seen[seq] = p["m"]
+        cursor = seq + 1
+    # every message delivered exactly once, cursor monotone
+    assert sorted(seen.values()) == ["f0", "f1", "s0", "s1"]
+    assert cursor == 4
+    # a FRESH consumer sees the lexicographic order instead — both views
+    # are total and complete; only per-consumer stability is promised
+    fresh = KVStoreTransport("cc", client=client, uid="host3-1")
+    assert [p["m"] for _s, p in fresh.poll("hb")] == ["f0", "s0", "f1", "s1"]
 
 
 # -- protocol layer ---------------------------------------------------------
@@ -220,6 +360,218 @@ def test_straggler_flagging_rearms_on_recovery():
     assert loop.log.count("straggler_worker") == 2
 
 
+class _AdversarialBus(InProcessBus):
+    """Worst-case delivery the KV store's lexicographic merge plus
+    at-least-once semantics can produce: every poll returns the FULL
+    retained history again (re-delivered tail), in reverse order."""
+
+    def poll(self, topic, since=0):
+        return list(reversed(super().poll(topic, self.low_water(topic))))
+
+
+def test_pump_orders_and_dedupes_adversarial_poll_batches():
+    """Regression for pump() re-delivery: polled batches are sorted by seq
+    and anything below the consumed cursor is skipped — so reversed,
+    fully-re-delivered batches neither trigger false detections (cursor
+    jumping past unconsumed beats) nor resurrect a dead worker (its old
+    beats re-reading as a join, which would double-fire the mitigation on
+    the next timeout)."""
+    clk = {"t": 0.0}
+    bus = _AdversarialBus()
+    coord = ClusterCoordinator(8, clock=lambda: clk["t"],
+                               virtual_devices=True)
+    coord.submit_foreground(Job("fg", "foreground", GRAPH, amp_limit=1.5))
+    mon = HeartbeatMonitor(8, timeout=5.0, clock=lambda: clk["t"])
+    loop = CoordinatorLoop(bus, mon, coordinator=coord, log=MitigationLog())
+    workers = [WorkerClient(bus, w) for w in range(8)]
+    for step in range(3):
+        clk["t"] = float(step)
+        for w in workers:
+            w.beat(step)
+        assert loop.pump() == []  # no false detections despite reversal
+    assert loop.log.count("failure_detected") == 0
+    clk["t"] = 7.5  # worker 3 silent past the timeout
+    for w in workers:
+        if w.worker_id != 3:
+            w.beat(4)
+    events = loop.pump()
+    assert [e["worker"] for e in events] == [3]
+    assert coord.healthy == {0, 1, 2, 4, 5, 6, 7}
+    # every later poll re-delivers the whole history (reversed): the dead
+    # worker's old beats must never read as a fresh join
+    for t in (9.0, 11.0, 14.0):
+        clk["t"] = t
+        for w in workers:
+            if w.worker_id != 3:
+                w.beat(int(t))
+        assert loop.pump() == []
+    assert loop.log.count("join") == 0
+    assert loop.log.count("failure_detected") == 1
+    assert loop.log.count("replan") == 1
+    assert coord.foreground().plan.num_gpus == 7
+
+
+# -- coordinator election (CoordinatorLease) --------------------------------
+
+
+def _leases(n, timeout=6.0):
+    clk = {"t": 0.0}
+    bus = InProcessBus()
+    leases = [CoordinatorLease(bus, w, timeout=timeout,
+                               clock=lambda: clk["t"]) for w in range(n)]
+    return clk, bus, leases
+
+
+def test_lease_seed_claim_renewal_and_acquired_oneshot():
+    clk, bus, (l0, l1) = _leases(2)
+    l0.claim()
+    assert l0.tick() is True and l0.acquired is True   # the winning tick
+    assert l0.tick() is True and l0.acquired is False  # held, not re-won
+    assert l1.tick() is False and l1.holder == 0 and l1.epoch == 1
+    # renewal cadence: past renew_every the holder republishes its claim,
+    # and the follower's staleness clock refreshes from the renewal
+    clk["t"] = l0.renew_every + 0.01
+    n_before = bus.backlog(LEASE_TOPIC)
+    assert l0.tick() is True
+    assert bus.backlog(LEASE_TOPIC) == n_before + 1
+    assert l1.tick() is False
+    assert not l1.stale()
+
+
+def test_lease_stale_holder_superseded_via_tick_alone():
+    """No manual claim: a follower's tick() observes staleness past the
+    timeout and takes the next epoch by itself."""
+    clk, bus, (l0, l1) = _leases(2, timeout=6.0)
+    l1.claim()
+    assert l1.tick() is True and l0.tick() is False
+    clk["t"] = 3.0
+    assert l1.tick() is True   # renews
+    assert l0.tick() is False  # fresh renewal: not stale
+    clk["t"] = 7.0             # holder dead since t=3: age 4 < timeout
+    assert l0.tick() is False
+    clk["t"] = 9.1             # age 6.1 >= timeout: stale
+    assert l0.tick() is True and l0.acquired is True
+    assert l0.epoch == 2 and l0.holder == 0
+
+
+def test_lease_concurrent_claims_tiebreak_to_lowest_id():
+    """Two survivors observe the stale lease at the same instant and claim
+    the SAME epoch; both see both claims in the log's total order and
+    converge on the lower worker id without any CAS."""
+    clk, bus, leases = _leases(3, timeout=6.0)
+    l0, l1, l2 = leases
+    l2.claim()
+    for lease in leases:
+        assert lease.tick() is (lease is l2)
+    clk["t"] = 10.0  # holder 2 dies; both survivors claim epoch 2
+    l1.claim()       # worker 1's claim hits the log FIRST
+    l0.claim()
+    assert l1.tick() is False  # converges on 0 despite claiming first
+    assert l0.tick() is True and l0.acquired is True
+    assert l0.holder == l1.holder == 0
+    assert l0.epoch == l1.epoch == 2
+    clk["t"] = 10.5  # the winner keeps the lease; the loser follows
+    assert l0.tick() is True and l0.acquired is False
+    assert l1.tick() is False
+
+
+def test_lease_partitioned_claimant_cannot_win():
+    """A partitioned worker's claim publish is dropped by the transport, so
+    it cannot adopt itself as holder while unreachable — claim() never
+    mutates local state, adoption only happens via the log."""
+    clk = {"t": 0.0}
+    w_end, c_end = fake_transport_pair()
+    lw = CoordinatorLease(w_end, 1, timeout=6.0, clock=lambda: clk["t"])
+    lc = CoordinatorLease(c_end, 0, timeout=6.0, clock=lambda: clk["t"])
+    w_end.disconnect()
+    assert lw.tick() is False and lw.holder is None  # claim died on the wire
+    assert lc.tick() is True and lc.holder == 0      # reachable one wins
+    w_end.reconnect()
+    assert lw.tick() is False and lw.holder == 0     # adopts the real holder
+
+
+# -- coordinator failover: bootstrap_from_log --------------------------------
+
+
+def test_bootstrap_from_log_adopts_pool_without_refiring():
+    """A survivor that wins the lease reconstructs coordinator state from
+    the topic logs: the pool of record is adopted (worker 3's re-plan is
+    NOT re-fired), members get a fresh grace period, and the normal pump
+    path keeps working — a later loss is detected exactly once."""
+    clk, bus, coord, mon, loop, workers = _cluster(n=8, timeout=5.0)
+    for step in range(3):
+        clk["t"] = float(step)
+        for w in workers:
+            w.beat(step)
+        loop.pump()
+    clk["t"] = 7.5
+    for w in workers:
+        if w.worker_id != 3:
+            w.beat(4)
+    assert len(loop.pump()) == 1  # worker 3 re-planned away by the OLD loop
+    assert coord.foreground().plan.num_gpus == 7
+    # the coordinator host dies: a survivor rebuilds everything fresh
+    coord2 = ClusterCoordinator(8, clock=lambda: clk["t"],
+                                virtual_devices=True)
+    coord2.submit_foreground(Job("fg", "foreground", GRAPH, amp_limit=1.5))
+    mon2 = HeartbeatMonitor(0, timeout=5.0, clock=lambda: clk["t"])
+    log2 = MitigationLog()
+    loop2 = CoordinatorLoop(bus, mon2, coordinator=coord2, log=log2)
+    info = loop2.bootstrap_from_log()
+    assert coord2.healthy == {0, 1, 2, 4, 5, 6, 7}
+    assert coord2.foreground().plan.num_gpus == 7
+    assert info["pool"] == [0, 1, 2, 4, 5, 6, 7]
+    assert log2.count("coordinator_failover") == 1
+    assert log2.count("failure_detected") == 0  # adopted, not re-fired
+    assert log2.count("replan") == 0
+    clk["t"] = 8.0
+    for w in workers:
+        if w.worker_id != 3:
+            w.beat(5)
+    assert loop2.pump() == []
+    assert log2.count("join") == 0  # members adopted, not re-joined
+    clk["t"] = 14.0  # a LATER loss: worker 5 goes silent
+    for w in workers:
+        if w.worker_id not in (3, 5):
+            w.beat(6)
+    events = loop2.pump()
+    assert [e["worker"] for e in events] == [5]
+    assert coord2.healthy == {0, 1, 2, 4, 6, 7}
+    assert coord2.foreground().plan.num_gpus == 6
+    assert log2.count("failure_detected") == 1
+
+
+def test_gc_bounds_topics_and_keeps_pool_of_record():
+    """With gc_every wired, a long run keeps both topics bounded: the hb
+    log compacts to the loop's cursor (backlog 0 between pumps) and the
+    reconfig log compacts to the live workers' acks — except the newest
+    event, which survives as the pool of record so a failover bootstrap
+    can still restore the coordinator."""
+    clk, bus, coord, mon, loop, workers = _cluster(n=8, timeout=5.0)
+    loop.gc_every = 1
+    for step in range(40):
+        clk["t"] = float(step) * 0.5
+        for w in workers:
+            if w.worker_id == 3 and step >= 4:
+                continue  # worker 3 dies early in the run
+            w.poll_reconfig()  # advance the ack the next beat carries
+            w.beat(step)
+        loop.pump()
+    assert loop.log.count("failure_detected") == 1
+    assert bus.backlog(HEARTBEAT_TOPIC) == 0
+    assert bus.low_water(HEARTBEAT_TOPIC) > 200  # ~280 beats compacted away
+    assert bus.backlog(RECONFIG_TOPIC) == 1      # newest event retained
+    coord2 = ClusterCoordinator(8, clock=lambda: clk["t"],
+                                virtual_devices=True)
+    coord2.submit_foreground(Job("fg", "foreground", GRAPH, amp_limit=1.5))
+    mon2 = HeartbeatMonitor(0, timeout=5.0, clock=lambda: clk["t"])
+    loop2 = CoordinatorLoop(bus, mon2, coordinator=coord2,
+                            log=MitigationLog())
+    loop2.bootstrap_from_log()
+    assert coord2.healthy == {0, 1, 2, 4, 5, 6, 7}
+    assert coord2.foreground().plan.num_gpus == 7
+
+
 def test_monitor_join_forget_membership():
     clk = {"t": 0.0}
     mon = HeartbeatMonitor(2, timeout=5.0, clock=lambda: clk["t"])
@@ -315,3 +667,79 @@ def test_train_loop_continuous_admission_resweeps_roster():
     # event once (first sweep), not once per cadence tick
     admissions = [e for e in coord.events if e.kind == "admission"]
     assert len(admissions) == 1
+
+
+def test_train_loop_apply_reconfig_noop_when_carving_unchanged():
+    """apply_reconfig on a 1-device host: the replan event's surviving pool
+    still contains this host's device, so the re-carve is an identity —
+    the event is logged but no remesh happens and every step completes.
+    (The mesh-actually-shrinks path needs >1 host device and lives in
+    tests/test_distributed.py.)"""
+    from repro.configs import TRAIN_4K, get_config
+    from repro.launch.mesh import make_mesh
+    from repro.train.loop import TrainConfig, train
+
+    clk = {"t": 0.0}
+    worker_end, coord_end = fake_transport_pair()
+    coord = ClusterCoordinator(8, clock=lambda: clk["t"],
+                               virtual_devices=True)
+    coord.submit_foreground(Job("fg", "foreground", GRAPH, amp_limit=1.5))
+    mon = HeartbeatMonitor(2, timeout=5.0, clock=lambda: clk["t"])
+    loop = CoordinatorLoop(coord_end, mon, coordinator=coord)
+    WorkerClient(worker_end, 1).beat(0)  # phantom: beats once, goes silent
+
+    def advance_clock(step):
+        clk["t"] = float(step)
+
+    cfg = get_config("qwen2-1.5b").reduced()
+    shape = dataclasses.replace(TRAIN_4K, seq_len=64, global_batch=4,
+                                name="smoke")
+    tc = TrainConfig(steps=8, coordinator=coord, heartbeat=mon,
+                     transport=worker_end, control_loop=loop,
+                     apply_reconfig=True)
+    report = train(cfg, shape, make_mesh(1, 1), tc,
+                   fault_injector=advance_clock)
+    assert report.steps_done == 8
+    assert report.mitigations.count("reconfig") == 1
+    assert report.remeshes == 0
+    assert report.mitigations.count("reconfig_applied") == 0
+    assert coord.healthy == {0, 2, 3, 4, 5, 6, 7}
+
+
+def test_train_loop_lease_gates_pump_and_bootstraps_on_acquire():
+    """Election-gated coordination inside train(): with a lease wired, the
+    first tick claims the vacant lease, the acquisition triggers exactly
+    one bootstrap_from_log, and the pump path then runs normally — the
+    phantom's silence is still detected once."""
+    from repro.configs import TRAIN_4K, get_config
+    from repro.launch.mesh import make_mesh
+    from repro.train.loop import TrainConfig, train
+
+    clk = {"t": 0.0}
+    worker_end, coord_end = fake_transport_pair()
+    coord = ClusterCoordinator(2, clock=lambda: clk["t"],
+                               virtual_devices=True)
+    coord.submit_foreground(Job("fg", "foreground", GRAPH, amp_limit=1.5))
+    mon = HeartbeatMonitor(2, timeout=5.0, clock=lambda: clk["t"])
+    loop = CoordinatorLoop(coord_end, mon, coordinator=coord)
+    lease = CoordinatorLease(coord_end, 0, timeout=5.0,
+                             clock=lambda: clk["t"])
+    WorkerClient(worker_end, 1).beat(0)  # phantom: beats once, goes silent
+
+    def advance_clock(step):
+        clk["t"] = float(step)
+
+    cfg = get_config("qwen2-1.5b").reduced()
+    shape = dataclasses.replace(TRAIN_4K, seq_len=64, global_batch=4,
+                                name="smoke")
+    tc = TrainConfig(steps=8, coordinator=coord, heartbeat=mon,
+                     transport=worker_end, control_loop=loop, lease=lease)
+    report = train(cfg, shape, make_mesh(1, 1), tc,
+                   fault_injector=advance_clock)
+    assert report.steps_done == 8
+    assert lease.holder == 0 and lease.epoch == 1
+    assert report.mitigations.count("coordinator_failover") == 1
+    assert report.mitigations.count("failure_detected") == 1
+    assert report.mitigations.count("replan") == 1
+    assert coord.healthy == {0}
+    assert coord.foreground().plan.num_gpus == 1
