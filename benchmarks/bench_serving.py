@@ -1,0 +1,279 @@
+"""Serving benchmark: request-trace replay at increasing QPS (ISSUE 9).
+
+Replays the committed arrival trace (``benchmarks/traces/requests_smoke.json``;
+schema in the traces README) through two engines:
+
+- **fixed batch** — the seed ``ServingEngine``: requests are grouped in
+  arrival order, each group waits for *batch formation* (its last member's
+  arrival), pads to the global max prompt length, and decodes to the group's
+  max decode budget; every member finishes when the whole group does.
+- **continuous** — ``ContinuousBatchingEngine`` driven by
+  ``ContinuousScheduler``: paged KV pool, per-lane lengths, lanes refilled
+  mid-decode, request-level admission (``Collocator.admit`` over the serving
+  plan), and — with >= 2 devices — prefill/decode disaggregation on
+  verifiably disjoint submeshes (``split_mesh_for_serving``).
+
+Time is a virtual clock advanced by measured wall durations of engine ops,
+so the replay is load-faithful without wall-clock sleeps.  Per sweep point
+we record p99 latency and goodput (SLO-satisfying requests per second of
+makespan); the stated SLO is ``SLO_FACTOR x`` the measured isolated
+single-request latency.
+
+``--smoke`` gates (CI, tier1-multidevice): at some swept QPS the continuous
+engine must hold p99 <= SLO while sustaining >= ``GOODPUT_GATE`` x the
+fixed-batch goodput, with the submeshes device-disjoint.  ``--record``
+appends the sweep to BENCH_serving.json.
+"""
+from __future__ import annotations
+
+import os
+import sys
+import time
+
+BENCH_FILE = os.path.join(os.path.dirname(__file__), "..", "BENCH_serving.json")
+TRACE_FILE = os.path.join(os.path.dirname(__file__), "traces",
+                          "requests_smoke.json")
+
+ARCH = "qwen2-1.5b"
+LANES = 4
+PAGE_TOKENS = 8
+N_PAGES = 33          # 32 usable pages + scratch
+LANE_CAPACITY = 32
+QPS_FACTORS = (0.5, 1.0, 2.0, 4.0)
+SLO_FACTOR = 3.5      # stated SLO = SLO_FACTOR x isolated request latency
+GOODPUT_GATE = 1.5    # continuous must sustain >= this x fixed-batch goodput
+
+
+def _percentile(xs, q):
+    import numpy as np
+    return float(np.percentile(np.asarray(xs, float), q)) if len(xs) else 0.0
+
+
+def replay_fixed_batch(engine, requests, batch, pmax):
+    """Seed-engine replay: arrival-ordered groups, batch-formation waits,
+    group-max decode budgets.  Returns (completed requests, makespan)."""
+    import numpy as np
+
+    from repro.serve.scheduler import VirtualClock
+
+    clk = VirtualClock()
+    order = sorted(requests, key=lambda r: (r.arrival, str(r.rid)))
+    for i in range(0, len(order), batch):
+        group = order[i : i + batch]
+        clk.advance_to(max(r.arrival for r in group))  # batch formation
+        prompts = np.zeros((batch, pmax), np.int32)
+        for row, r in enumerate(group):
+            prompts[row, : r.prompt_len] = r.prompt
+        budget = max(r.max_new_tokens for r in group)
+        t0 = time.perf_counter()
+        out = engine.generate(prompts, budget)
+        clk.advance(time.perf_counter() - t0)
+        for row, r in enumerate(group):
+            r.tokens = [int(t) for t in out[row, : r.max_new_tokens]]
+            r.finished_at = clk.now
+    return order, clk.now
+
+
+def _measure_isolated(engine, prompt_len, max_new, vocab):
+    """Warm isolated single-request latency through the continuous engine;
+    returns (request latency, prefill time, decode step time) — best of 3,
+    captured before the reset wipes the engine stats."""
+    import numpy as np
+
+    from repro.serve.engine import ServeStats
+    from repro.serve.scheduler import ContinuousScheduler, Request
+
+    rng = np.random.default_rng(99)
+    best, prefill_iso, step_iso = float("inf"), float("inf"), float("inf")
+    for i in range(3):
+        req = Request(
+            rid=f"iso{i}",
+            prompt=rng.integers(0, vocab, (prompt_len,), dtype=np.int32),
+            max_new_tokens=max_new, arrival=0.0,
+        )
+        engine.stats = ServeStats()
+        rep = ContinuousScheduler(engine).run([req])
+        best = min(best, rep.completed[0].latency)
+        prefill_iso = min(prefill_iso, engine.stats.prefill_s)
+        step_iso = min(
+            step_iso,
+            engine.stats.decode_s / max(engine.stats.decode_steps, 1),
+        )
+        engine.reset()
+    return best, max(prefill_iso, 1e-6), max(step_iso, 1e-6)
+
+
+def smoke(record: bool = False, gate: bool = True) -> int:
+    if "jax" not in sys.modules:
+        os.environ.setdefault(
+            "XLA_FLAGS", "--xla_force_host_platform_device_count=8"
+        )
+    import jax
+    import numpy as np
+
+    import _bench_util
+
+    from repro.configs import get_config
+    from repro.launch.mesh import split_mesh_for_serving
+    from repro.models.api import get_model
+    from repro.serve.engine import ContinuousBatchingEngine, ServeStats, ServingEngine
+    from repro.serve.scheduler import (
+        ContinuousScheduler,
+        ServingAdmission,
+        VirtualClock,
+    )
+    from repro.serve.trace import load_request_trace, materialize_requests
+
+    cfg = get_config(ARCH).reduced()
+    api = get_model(cfg)
+    params = api.init(jax.random.PRNGKey(0))
+    trace = load_request_trace(TRACE_FILE)
+    vocab = min(trace.vocab_size, cfg.vocab_size)
+    pmax = max(r["prompt_len"] for r in trace.requests)
+    new_max = max(r["max_new"] for r in trace.requests)
+
+    # prefill/decode disaggregation (>= 2 devices): verifiably disjoint.
+    # One device per stage — forced host devices share the physical cores,
+    # so a replicated multi-device submesh would multiply every dispatch's
+    # cost without adding parallelism; disjoint single-device carvings give
+    # the honest disaggregation measurement at smoke scale.
+    n_dev = len(jax.devices())
+    submeshes = None
+    if n_dev >= 2:
+        submeshes = split_mesh_for_serving(1, devices=jax.devices()[:2])
+        assert submeshes.disjoint(), submeshes
+        assert submeshes.device_sets_disjoint(), submeshes
+
+    cont = ContinuousBatchingEngine(
+        cfg, params, lanes=LANES, n_pages=N_PAGES, page_tokens=PAGE_TOKENS,
+        lane_capacity=LANE_CAPACITY, submeshes=submeshes,
+    )
+    fixed = ServingEngine(cfg, params, batch=LANES,
+                          capacity=pmax + new_max)
+
+    # warmup: compile every prompt-length prefill + the decode steps once,
+    # outside the timed replays
+    warm = materialize_requests(trace, vocab_size=vocab)
+    for plen in sorted({r.prompt_len for r in warm}):
+        ContinuousScheduler(cont).run([
+            w for w in materialize_requests(trace, vocab_size=vocab)
+            if w.prompt_len == plen
+        ][:1])
+        cont.reset()
+    fixed.generate(np.zeros((LANES, pmax), np.int32), 2)
+
+    t_iso, prefill_iso, step_iso = _measure_isolated(cont, pmax, new_max, vocab)
+    slo = SLO_FACTOR * t_iso
+
+    admission = ServingAdmission(
+        max(n_dev, 2), max(n_dev // 2, 1),
+        prefill_time=prefill_iso, decode_step_time=step_iso,
+        ttft_slo=max(slo, 2.0 * prefill_iso),
+        interference=ServingAdmission.fit_interference(
+            prefill_iso,
+            [(1.0, 1.05 * prefill_iso), (2.0, 1.12 * prefill_iso)],
+        ),
+    )
+
+    rows = []
+    best = None
+    for factor in QPS_FACTORS:
+        qps = trace.qps * factor
+        creqs = materialize_requests(trace, qps=qps, vocab_size=vocab)
+        sched = ContinuousScheduler(cont, admission=admission,
+                                    clock=VirtualClock())
+        crep = sched.run(creqs)
+        assert len(crep.completed) == len(creqs), "continuous dropped requests"
+        cont.alloc.check_invariants()
+        assert cont.alloc.used_pages == 0, "pages leaked after drain"
+        cstats = cont.stats
+        cont.reset()
+
+        freqs = materialize_requests(trace, qps=qps, vocab_size=vocab)
+        fixed.stats = ServeStats()
+        fdone, fmk = replay_fixed_batch(fixed, freqs, LANES, pmax)
+
+        clat = [r.latency for r in crep.completed]
+        flat = [r.latency for r in fdone]
+        cgood = crep.goodput(slo)
+        fgood = (sum(1 for r in fdone if r.latency <= slo) / fmk
+                 if fmk > 0 else 0.0)
+        ratio = cgood / fgood if fgood > 0 else float("inf")
+        row = {
+            "qps": qps,
+            "slo_s": slo,
+            "continuous": {
+                "p50_s": _percentile(clat, 50), "p99_s": _percentile(clat, 99),
+                "goodput_rps": cgood, "makespan_s": crep.makespan,
+                "tokens_per_s": cstats.tokens_per_s,
+                "admission_deferrals": crep.admission_deferrals,
+                "page_deferrals": crep.page_deferrals,
+            },
+            "fixed_batch": {
+                "p50_s": _percentile(flat, 50), "p99_s": _percentile(flat, 99),
+                "goodput_rps": fgood, "makespan_s": fmk,
+                "tokens_per_s": fixed.stats.tokens_per_s,
+            },
+            "goodput_ratio": ratio,
+        }
+        rows.append(row)
+        ok_here = (row["continuous"]["p99_s"] <= slo
+                   and (fgood == 0.0 and cgood > 0.0 or ratio >= GOODPUT_GATE))
+        if ok_here and (best is None or ratio > best["goodput_ratio"]):
+            best = row
+        print(f"qps={qps:6.1f}  cont p99={row['continuous']['p99_s']*1e3:7.1f}ms "
+              f"good={cgood:6.2f}/s | fixed p99={row['fixed_batch']['p99_s']*1e3:7.1f}ms "
+              f"good={fgood:6.2f}/s | ratio={ratio:5.2f} "
+              f"{'<- meets gate' if ok_here else ''}")
+
+    disagg = submeshes is not None
+    ok = best is not None
+    print(f"serving smoke on {n_dev} devices "
+          f"(disaggregated={disagg}, SLO={slo*1e3:.1f}ms): "
+          f"{'ok' if ok else 'FAIL'}"
+          + (f" best ratio {best['goodput_ratio']:.2f}x at "
+             f"qps={best['qps']:.1f}" if ok and best["goodput_ratio"] != float("inf")
+             else ""))
+
+    if record:
+        _bench_util.append_record(BENCH_FILE, {
+            "date": _bench_util.utc_now_iso(),
+            "commit": _bench_util.git_sha(),
+            "config": f"{ARCH}-serving-smoke",
+            "devices": n_dev,
+            "disaggregated": disagg,
+            "trace": os.path.basename(TRACE_FILE),
+            "lanes": LANES, "n_pages": N_PAGES, "page_tokens": PAGE_TOKENS,
+            "iso_latency_s": t_iso, "slo_s": slo,
+            "slo_factor": SLO_FACTOR, "goodput_gate": GOODPUT_GATE,
+            # inf ratio (fixed-batch goodput 0) is not valid JSON -> None
+            "sweep": [
+                {**row, "goodput_ratio": (
+                    None if row["goodput_ratio"] == float("inf")
+                    else row["goodput_ratio"])}
+                for row in rows
+            ],
+            "gate_ok": ok,
+        })
+
+    if gate and not ok:
+        print("FAIL: no swept QPS had continuous p99 <= SLO with goodput "
+              f">= {GOODPUT_GATE}x fixed batch", file=sys.stderr)
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    import argparse
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="trace replay + goodput gate on forced host devices (CI)")
+    ap.add_argument("--record", action="store_true",
+                    help="with --smoke: append to BENCH_serving.json")
+    ap.add_argument("--no-gate", action="store_true",
+                    help="run and record the sweep without failing the gate")
+    args = ap.parse_args()
+    sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+    sys.exit(smoke(record=args.record, gate=not args.no_gate)
+             if args.smoke else smoke(record=False, gate=False))

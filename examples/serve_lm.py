@@ -38,7 +38,7 @@ def main():
     out = eng.generate(prompts, args.new_tokens)
     print(f"generated {out.shape[1]} tokens x {out.shape[0]} sequences")
     print(f"prefill: {eng.stats.prefill_s*1e3:.0f} ms | "
-          f"decode: {eng.stats.tokens_per_s:.1f} steps/s")
+          f"decode: {eng.stats.tokens_per_s:.1f} tokens/s")
     print("first sequence:", out[0][:12], "...")
 
 

@@ -639,6 +639,21 @@ class Collocator:
         # launched step counts into service time for the deficit accounting
         self._last_step_t: List[float] = []
 
+    def set_tenants(self, tenants: Sequence[BgTenant]) -> None:
+        """Replace the tenant roster in place.
+
+        Request-level admission (serving) re-sweeps ``admit()`` every
+        scheduler tick with the *current* candidate requests as tenants —
+        rebuilding the Collocator each tick would discard the calibrated
+        interference model, the QoS monitor's baselines/bans, and the
+        hoisted sim/step quantum (plan and cfg are unchanged, so those all
+        stay valid).  Per-slot deficits are kept positionally: a deficit
+        describes the service history of the i-th chunk position, which is
+        what the fair-share rotation needs even as roster *identity*
+        churns request-to-request.
+        """
+        self.tenants = tuple(sorted(tenants, key=lambda t: -t.priority))
+
     def schedule(self) -> List[Tuple[int, int]]:
         """(stage_index, n_bg_steps) pairs for one iteration (single-tenant
         view; see ``schedule_tenants`` for the multi-tenant packing)."""

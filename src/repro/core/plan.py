@@ -363,6 +363,37 @@ class BurstPlan:
         return "\n".join(lines)
 
 
+def serving_plan(n_devices: int, n_prefill: int,
+                 prefill_time: float = 1.0) -> BurstPlan:
+    """Cast disaggregated serving as a one-stage BurstPlan.
+
+    Prefill is the latency-critical foreground: a single stage occupying
+    devices [0, n_prefill) for ``prefill_time``.  The remaining
+    ``n_devices - n_prefill`` devices are that stage's burst gap — exactly
+    where the decode stage (and each decode request, as a ``BgTenant``)
+    packs.  Casting it this way means the whole gap machinery applies
+    unchanged to serving: ``gaps()``/``free_device_ranges`` locate the
+    decode carving, ``split_mesh_for_plan`` builds the disjoint submeshes,
+    and ``Collocator.admit()`` becomes request-level admission under a
+    latency SLO instead of the training QoS bound.
+    """
+    if not 0 < n_prefill < n_devices:
+        raise ValueError(
+            f"serving plan needs 0 < n_prefill < n_devices, got "
+            f"n_prefill={n_prefill}, n_devices={n_devices}"
+        )
+    if prefill_time <= 0.0:
+        raise ValueError(f"prefill_time must be > 0, got {prefill_time}")
+    layer = LayerPlan(
+        index=0, name="prefill", gpus=n_prefill, time=prefill_time,
+        comp=prefill_time, sync=0.0, comm_in=0.0, amp=1.0, kind="prefill",
+    )
+    return BurstPlan(
+        layers=(layer,), num_gpus=n_devices, amp_limit=1.0,
+        single_gpu_time=prefill_time * n_prefill,
+    )
+
+
 # ---------------------------------------------------------------------------
 # Plan -> mesh sharding re-maps (DESIGN.md §2: burst = per-stage axis re-map)
 # ---------------------------------------------------------------------------

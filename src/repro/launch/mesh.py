@@ -14,7 +14,7 @@ import jax
 import numpy as np
 from jax.sharding import Mesh
 
-from repro.core.plan import normalize_quanta, pack_ranges, pow2_floor
+from repro.core.plan import normalize_quanta, pack_ranges, pow2_floor, serving_plan
 
 
 def make_production_mesh(*, multi_pod: bool = False):
@@ -204,3 +204,62 @@ def split_mesh_for_plan(plan, *, devices: Optional[Sequence] = None,
         bg[gap.stage_index] = next(s for s in slots if s is not None)
     return PlanSubmeshes(fg_range=(0, fg_peak), fg_mesh=fg_mesh, bg=bg,
                          stage_fg_range=stage_fg, bg_tenants=bg_tenants)
+
+
+# ---------------------------------------------------------------------------
+# Serving submeshes (prefill/decode disaggregation — ISSUE 9)
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class ServingSubmeshes:
+    """Disjoint prefill/decode submeshes for a disaggregated serving engine.
+
+    Built by carving a ``serving_plan`` with ``split_mesh_for_plan``:
+    prefill is the plan's foreground stage on [0, n_prefill), decode is the
+    gap's largest bg chunk.  The ranges are positional device indices, so
+    ``disjoint`` is checkable without touching the device objects.
+    """
+
+    prefill_range: Tuple[int, int]
+    prefill_mesh: Mesh
+    decode_range: Tuple[int, int]
+    decode_mesh: Mesh
+
+    def disjoint(self) -> bool:
+        (ps, pe), (ds, de) = self.prefill_range, self.decode_range
+        return pe <= ds or de <= ps
+
+    def device_sets_disjoint(self) -> bool:
+        """The ground-truth check: no physical device in both meshes."""
+        p = {d.id for d in self.prefill_mesh.devices.flat}
+        q = {d.id for d in self.decode_mesh.devices.flat}
+        return not (p & q)
+
+
+def split_mesh_for_serving(n_prefill: int, *,
+                           devices: Optional[Sequence] = None,
+                           prefill_model: int = 1,
+                           decode_model: int = 1) -> ServingSubmeshes:
+    """Carve the device set into disjoint prefill + decode submeshes.
+
+    Reuses the ``split_mesh_for_plan`` carving over a ``serving_plan`` —
+    prefill as the foreground stage, decode as its burst gap — so the
+    positional-disjointness invariant of ``submesh_from_range`` carries
+    over: the two submeshes can never share a device.
+    """
+    devs = list(devices) if devices is not None else jax.devices()
+    plan = serving_plan(len(devs), n_prefill)
+    split = split_mesh_for_plan(plan, devices=devs, fg_model=prefill_model,
+                                bg_model=decode_model)
+    hit = split.bg.get(0)
+    if hit is None:
+        raise ValueError(
+            f"no decode carving: {len(devs) - n_prefill} free devices can't "
+            f"fit a decode submesh with model={decode_model}"
+        )
+    (ds, de), dmesh = hit
+    return ServingSubmeshes(
+        prefill_range=split.fg_range, prefill_mesh=split.fg_mesh,
+        decode_range=(ds, de), decode_mesh=dmesh,
+    )

@@ -28,6 +28,7 @@ class ModelAPI:
     loss: Callable  # (params, batch) -> (loss, metrics)
     forward: Callable  # (params, *inputs) -> logits
     decode_step: Optional[Callable]  # (params, token, cache, cache_len) -> (logits, cache)
+    #   cache_len: scalar, or (B,) per-lane lengths (attn families only)
     cache_schema: Optional[Callable]  # (batch, capacity) -> schema
     prefill: Optional[Callable] = None
 

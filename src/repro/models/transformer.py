@@ -99,16 +99,26 @@ def decoder_block_decode(
     h: jax.Array,  # (B, 1, D)
     k_cache: jax.Array,  # (B, cap, KV, hd)
     v_cache: jax.Array,
-    cache_len: jax.Array,  # scalar int32
+    cache_len: jax.Array,  # scalar int32, or (B,) per-row lengths
     cfg,
 ) -> tuple:
-    positions = jnp.full((h.shape[0], 1), cache_len, dtype=jnp.int32)
+    B = h.shape[0]
+    per_row = jnp.ndim(cache_len) == 1  # continuous batching: ragged lanes
+    positions = jnp.broadcast_to(
+        jnp.reshape(cache_len, (-1, 1)).astype(jnp.int32), (B, 1)
+    )
     a_in = rms_norm(h, p["ln1"], cfg.norm_eps)
     q, k, v = qkv_project(p["attn"], a_in, cfg)
     q = apply_rope(q, positions, cfg.rope_theta)
     k = apply_rope(k, positions, cfg.rope_theta)
-    k_cache = jax.lax.dynamic_update_slice_in_dim(k_cache, k.astype(k_cache.dtype), cache_len, 1)
-    v_cache = jax.lax.dynamic_update_slice_in_dim(v_cache, v.astype(v_cache.dtype), cache_len, 1)
+    if per_row:
+        # each lane appends at its own length (one scatter per row)
+        rows = jnp.arange(B)
+        k_cache = k_cache.at[rows, cache_len].set(k[:, 0].astype(k_cache.dtype))
+        v_cache = v_cache.at[rows, cache_len].set(v[:, 0].astype(v_cache.dtype))
+    else:
+        k_cache = jax.lax.dynamic_update_slice_in_dim(k_cache, k.astype(k_cache.dtype), cache_len, 1)
+        v_cache = jax.lax.dynamic_update_slice_in_dim(v_cache, v.astype(v_cache.dtype), cache_len, 1)
     attn_out = attn_lib.decode_attention(
         q,
         k_cache.astype(q.dtype),
@@ -223,7 +233,9 @@ def prefill(params: dict, tokens: jax.Array, cfg, cache_capacity: int, patch_emb
 
 def decode_step(params: dict, token: jax.Array, cache: dict, cache_len: jax.Array, cfg):
     """token: (B, 1) int32; cache: {'k','v'} stacked (L, B, cap, KV, hd).
-    Returns (logits (B, V), new cache)."""
+    ``cache_len`` is a scalar (all lanes aligned) or a (B,) vector of
+    per-lane lengths (continuous batching: lanes decode at ragged
+    positions).  Returns (logits (B, V), new cache)."""
     h = embed_tokens(params, token, cfg)
 
     bschema = block_schema(cfg)

@@ -1,32 +1,60 @@
-"""Batched serving engine: prefill + greedy decode with a sharded KV cache.
+"""Serving engines: fixed-batch prefill+decode, and continuous batching.
 
-Continuous-batching-lite: requests are grouped into a fixed batch; finished
-sequences are masked out (EOS) while the batch keeps stepping.  Decode steps
-are jitted once (cache donated) — the XLA-executable analogue of the paper's
-CUDA-graph serving path.
+``ServingEngine`` is the fixed-batch engine: requests are grouped into one
+batch; finished sequences are masked to EOS (output and fed-back token)
+while the batch keeps stepping.  Decode steps are jitted once (cache
+donated) — the XLA-executable analogue of the paper's CUDA-graph serving
+path — and the fused prefill is jitted once per prompt length, cached on
+the engine.
+
+``ContinuousBatchingEngine`` (ISSUE 9 tentpole) serves a request *stream*:
+a paged KV pool (``serve/kvcache.py``) replaces the contiguous per-batch
+cache, each batch lane holds one live request with its own page table and
+length, finished lanes are retired and refilled mid-decode, and — when
+built over ``split_mesh_for_serving`` submeshes — prefill and decode run
+on disjoint device carvings with an explicit page handoff between them.
+``serve/scheduler.py`` drives it over a request trace.
 """
 from __future__ import annotations
 
 import time
-from dataclasses import dataclass, field
-from typing import List, Optional
+from dataclasses import dataclass
+from typing import Callable, Dict, List, Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec
 
 from repro.models.api import get_model
-from repro.serve.kvcache import init_cache
+from repro.serve.kvcache import (
+    SCRATCH_PAGE,
+    PageAllocator,
+    cache_to_pages,
+    gather_view,
+    init_cache,
+    init_paged_cache,
+    scatter_token,
+    write_pages,
+)
 
 
 @dataclass
 class ServeStats:
     prefill_s: float = 0.0
-    decode_steps: int = 0
+    prefills: int = 0
+    decode_steps: int = 0    # batch steps dispatched
+    decode_tokens: int = 0   # tokens actually produced (live lanes per step)
     decode_s: float = 0.0
 
     @property
     def tokens_per_s(self) -> float:
+        """Decode throughput in *tokens* (live lanes x steps), comparable
+        across batch sizes — not batch steps."""
+        return self.decode_tokens / self.decode_s if self.decode_s else 0.0
+
+    @property
+    def steps_per_s(self) -> float:
         return self.decode_steps / self.decode_s if self.decode_s else 0.0
 
 
@@ -38,10 +66,31 @@ class ServingEngine:
         self.batch = batch
         self.capacity = capacity
         self.mesh = mesh
+        self.rules = rules
         self.stats = ServeStats()
+        self.prefill_compiles = 0  # bumped at trace time, not per call
         self._decode = jax.jit(self.api.decode_step, donate_argnums=(2,))
-        self._cache = init_cache(self.api, batch, capacity, mesh, rules)
+        self._prefill_fn: Optional[Callable] = None
+        self.reset()
+
+    def reset(self) -> None:
+        """Fresh KV state: every batch decodes against its own cache, never
+        a predecessor's leftover entries."""
+        self._cache = init_cache(self.api, self.batch, self.capacity,
+                                 self.mesh, self.rules)
         self._len = jnp.int32(0)
+
+    def _fused_prefill(self) -> Callable:
+        """The jitted fused prefill, built once and cached on the engine —
+        per-call ``jax.jit(lambda ...)`` would recompile every batch."""
+        if self._prefill_fn is None:
+            def f(p, t):
+                # runs at trace time only: counts compiles, not calls
+                self.prefill_compiles += 1
+                return self.api.prefill(p, t, self.capacity)
+
+            self._prefill_fn = jax.jit(f)
+        return self._prefill_fn
 
     def prefill(self, prompts: np.ndarray) -> jax.Array:
         """prompts: (batch, prompt_len) int32. Feeds tokens one step at a
@@ -52,9 +101,9 @@ class ServingEngine:
         assert B == self.batch
         last_logits = None
         if self.api.prefill is not None and self.cfg.block_type in ("attn_mlp", "moe"):
-            last_logits, cache = jax.jit(
-                lambda p, t: self.api.prefill(p, t, self.capacity)
-            )(self.params, jnp.asarray(prompts, jnp.int32))
+            last_logits, cache = self._fused_prefill()(
+                self.params, jnp.asarray(prompts, jnp.int32)
+            )
             self._cache = cache
             self._len = jnp.int32(P)
         else:
@@ -66,25 +115,250 @@ class ServingEngine:
                 self._len = self._len + 1
         jax.block_until_ready(last_logits)
         self.stats.prefill_s += time.perf_counter() - t0
+        self.stats.prefills += 1
         return last_logits
 
     def generate(self, prompts: np.ndarray, max_new_tokens: int,
                  eos_id: Optional[int] = None) -> np.ndarray:
+        self.reset()
         logits = self.prefill(prompts)
         out: List[np.ndarray] = []
-        tok = jnp.argmax(logits, axis=-1)[:, None].astype(jnp.int32)
+        tok = np.asarray(jnp.argmax(logits, axis=-1), np.int32)
         done = np.zeros((self.batch,), bool)
         t0 = time.perf_counter()
-        for _ in range(max_new_tokens):
-            out.append(np.asarray(tok)[:, 0])
+        for i in range(max_new_tokens):
+            cur = tok.copy()
             if eos_id is not None:
-                done |= out[-1] == eos_id
-                if done.all():
-                    break
-            logits, self._cache = self._decode(self.params, tok, self._cache, self._len)
+                # finished rows emit EOS, not the garbage their lane keeps
+                # argmax-ing, and keep feeding it back (frozen)
+                cur[done] = eos_id
+                done |= cur == eos_id
+            out.append(cur)
+            if done.all() or i + 1 == max_new_tokens:
+                # the last emitted token needs no further decode: logits
+                # would be discarded, so neither compute nor count the step
+                break
+            live = int((~done).sum()) if eos_id is not None else self.batch
+            feed = jnp.asarray(cur[:, None], jnp.int32)
+            logits, self._cache = self._decode(
+                self.params, feed, self._cache, self._len
+            )
             self._len = self._len + 1
-            tok = jnp.argmax(logits, axis=-1)[:, None].astype(jnp.int32)
+            tok = np.asarray(jnp.argmax(logits, axis=-1), np.int32)
             self.stats.decode_steps += 1
-        jax.block_until_ready(tok)
+            self.stats.decode_tokens += live
+        jax.block_until_ready(self._len)
         self.stats.decode_s += time.perf_counter() - t0
         return np.stack(out, axis=1)
+
+
+# ---------------------------------------------------------------------------
+# Continuous batching over the paged pool (ISSUE 9 tentpole)
+# ---------------------------------------------------------------------------
+
+
+def _replicate(tree, mesh):
+    sh = NamedSharding(mesh, PartitionSpec())
+    return jax.tree.map(lambda x: jax.device_put(x, sh), tree)
+
+
+class ContinuousBatchingEngine:
+    """Request-stream serving: paged KV, per-lane lengths, lane reuse.
+
+    ``lanes`` batch slots decode together under one jitted step; each live
+    lane holds one request, its page-table row and its own length (the
+    ``(B,)`` ``cache_len`` path of ``decode_step``).  Dead lanes keep
+    stepping — the batch shape is static under jit — with an all-scratch
+    table row, so their writes land in the reserved scratch page and their
+    logits are discarded.  On ``admit`` a request is prefilled (exact
+    prompt length, page-multiple cache capacity), its cache is split into
+    pages and written into the pool, and the prefill's last-position
+    argmax becomes its first generated token; ``step`` advances every live
+    lane one token; ``retire`` frees the lane and returns its pages.
+
+    With ``submeshes`` (``split_mesh_for_serving``), prefill runs on the
+    prefill carving and decode on the disjoint decode carving: params are
+    replicated onto both, the pool lives on the decode mesh, and the admit
+    handoff reshards the prefilled page chunks across carvings before
+    writing them into the pool.
+    """
+
+    def __init__(self, cfg, params, *, lanes: int, n_pages: int,
+                 page_tokens: int = 16, lane_capacity: int = 128,
+                 submeshes=None):
+        if cfg.block_type not in ("attn_mlp", "moe"):
+            raise ValueError(
+                f"paged serving needs a KV-cache family, got {cfg.block_type}"
+            )
+        self.cfg = cfg
+        self.api = get_model(cfg)
+        self.lanes = lanes
+        self.page_tokens = page_tokens
+        self.max_pages = -(-lane_capacity // page_tokens)
+        self.lane_capacity = self.max_pages * page_tokens
+        self.alloc = PageAllocator(n_pages, page_tokens)
+        self.submeshes = submeshes
+        if submeshes is not None:
+            self.params_prefill = _replicate(params, submeshes.prefill_mesh)
+            self.params_decode = _replicate(params, submeshes.decode_mesh)
+            self.pool = _replicate(
+                init_paged_cache(self.api, n_pages, page_tokens),
+                submeshes.decode_mesh,
+            )
+        else:
+            self.params_prefill = self.params_decode = params
+            self.pool = init_paged_cache(self.api, n_pages, page_tokens)
+        self.tables = np.full((lanes, self.max_pages), SCRATCH_PAGE, np.int32)
+        self.lens = np.zeros((lanes,), np.int32)
+        self.lane_tok = np.zeros((lanes,), np.int32)
+        self.lane_req: List[Optional[object]] = [None] * lanes
+        self.stats = ServeStats()
+        self.prefill_compiles = 0
+        self._prefill_fns: Dict[int, Callable] = {}
+        self._decode = self._make_decode()
+
+    def _make_decode(self) -> Callable:
+        api = self.api
+
+        def step(params, tok, pool, tables, lens):
+            view = gather_view(pool, tables)
+            logits, new_view = api.decode_step(params, tok, view, lens)
+            return logits, scatter_token(pool, new_view, tables, lens)
+
+        return jax.jit(step, donate_argnums=(2,))
+
+    def reset(self) -> None:
+        """Fresh serving state (pool, tables, allocator, stats); the jitted
+        decode/prefill executables are kept — warmup survives a reset."""
+        n_pages = self.alloc.n_pages
+        self.alloc = PageAllocator(n_pages, self.page_tokens)
+        pool = init_paged_cache(self.api, n_pages, self.page_tokens)
+        if self.submeshes is not None:
+            pool = _replicate(pool, self.submeshes.decode_mesh)
+        self.pool = pool
+        self.tables[:] = SCRATCH_PAGE
+        self.lens[:] = 0
+        self.lane_tok[:] = 0
+        self.lane_req = [None] * self.lanes
+        self.stats = ServeStats()
+
+    # -- capacity ----------------------------------------------------------
+
+    def live_count(self) -> int:
+        return sum(1 for r in self.lane_req if r is not None)
+
+    def has_free_lane(self) -> bool:
+        return any(r is None for r in self.lane_req)
+
+    def can_fit(self, req, check: bool = False) -> bool:
+        """Whether ``req`` can *ever* run here (lane capacity + pool size);
+        ``check=True`` raises — an oversize request is a config error, not
+        a transient full-pool condition."""
+        need = self.alloc.pages_for(req.total_tokens)
+        ok = (req.total_tokens <= self.lane_capacity
+              and need <= self.alloc.n_pages - 1)
+        if check and not ok:
+            raise ValueError(
+                f"request {req.rid!r} needs {req.total_tokens} tokens "
+                f"({need} pages); engine lanes hold {self.lane_capacity} "
+                f"tokens over a {self.alloc.n_pages - 1}-page pool"
+            )
+        return ok
+
+    # -- prefill (per prompt length, jitted once each) ---------------------
+
+    def _prefill_fn(self, prompt_len: int) -> Callable:
+        fn = self._prefill_fns.get(prompt_len)
+        if fn is None:
+            cap = self.alloc.pages_for(prompt_len) * self.page_tokens
+
+            def f(p, t):
+                self.prefill_compiles += 1  # trace-time: counts compiles
+                return self.api.prefill(p, t, cap)
+
+            fn = self._prefill_fns[prompt_len] = jax.jit(f)
+        return fn
+
+    # -- scheduler-facing ops ----------------------------------------------
+
+    def admit(self, req) -> bool:
+        """Prefill ``req`` into a free lane.  False when the page pool
+        can't hold it right now (caller keeps it queued)."""
+        lane = next(
+            (i for i, r in enumerate(self.lane_req) if r is None), None
+        )
+        if lane is None:
+            return False
+        pages = self.alloc.alloc(req.rid, req.total_tokens)
+        if pages is None:
+            return False
+        t0 = time.perf_counter()
+        P = req.prompt_len
+        logits, cache = self._prefill_fn(P)(
+            self.params_prefill, jnp.asarray(req.prompt[None, :], jnp.int32)
+        )
+        first = int(jnp.argmax(logits[0]))
+        chunks = cache_to_pages(cache, self.page_tokens)
+        if self.submeshes is not None:
+            # the disaggregation handoff: reshard the prefilled pages from
+            # the prefill carving onto the decode carving, then scatter
+            chunks = _replicate(chunks, self.submeshes.decode_mesh)
+        n_pf = self.alloc.pages_for(P)
+        self.pool = write_pages(self.pool, pages[:n_pf], chunks)
+        self.stats.prefill_s += time.perf_counter() - t0
+        self.stats.prefills += 1
+        row = np.full((self.max_pages,), SCRATCH_PAGE, np.int32)
+        row[: len(pages)] = pages
+        self.tables[lane] = row
+        self.lens[lane] = P
+        self.lane_tok[lane] = first
+        self.lane_req[lane] = req
+        req.tokens.append(first)
+        return True
+
+    def step(self) -> List[object]:
+        """One decode tick over every live lane; returns newly finished
+        requests (their lanes already retired)."""
+        live = [i for i, r in enumerate(self.lane_req) if r is not None]
+        if not live:
+            return []
+        t0 = time.perf_counter()
+        logits, self.pool = self._decode(
+            self.params_decode,
+            jnp.asarray(self.lane_tok[:, None], jnp.int32),
+            self.pool,
+            jnp.asarray(self.tables),
+            jnp.asarray(self.lens),
+        )
+        nxt = np.asarray(jnp.argmax(logits, axis=-1), np.int32)
+        self.stats.decode_s += time.perf_counter() - t0
+        self.stats.decode_steps += 1
+        finished: List[object] = []
+        for lane in live:
+            req = self.lane_req[lane]
+            self.lens[lane] += 1
+            tok = int(nxt[lane])
+            req.tokens.append(tok)
+            self.lane_tok[lane] = tok
+            self.stats.decode_tokens += 1
+            if req.decoding_done():
+                finished.append(req)
+                self._retire_lane(lane)
+        return finished
+
+    def retire(self, req) -> None:
+        """Free ``req``'s lane and pages (instant-finish path: a request
+        whose prefill already satisfied it)."""
+        for lane, r in enumerate(self.lane_req):
+            if r is req:
+                self._retire_lane(lane)
+                return
+        raise KeyError(f"request {req.rid!r} holds no lane")
+
+    def _retire_lane(self, lane: int) -> None:
+        req = self.lane_req[lane]
+        self.alloc.free(req.rid)
+        self.tables[lane] = SCRATCH_PAGE
+        self.lens[lane] = 0
+        self.lane_tok[lane] = 0
+        self.lane_req[lane] = None

@@ -1,4 +1,7 @@
-"""Serving engine: generation shapes, greedy consistency, stats."""
+"""Serving engine: generation shapes, greedy consistency, stats, and the
+fixed-batch engine's regression fixes (stale cache, trailing decode,
+post-EOS masking, prefill retracing, token-based throughput) plus the
+paged-allocator invariants."""
 import dataclasses
 
 import jax
@@ -9,7 +12,7 @@ import pytest
 from repro.configs import get_config
 from repro.models import get_model
 from repro.serve.engine import ServingEngine
-from repro.serve.kvcache import cache_bytes, init_cache
+from repro.serve.kvcache import PageAllocator, cache_bytes, init_cache
 
 
 @pytest.mark.parametrize("arch", ["qwen2-1.5b", "rwkv6-1.6b"])
@@ -50,3 +53,121 @@ def test_rwkv_cache_capacity_free():
     cfg = get_config("rwkv6-1.6b").reduced()
     api = get_model(cfg)
     assert cache_bytes(api, 2, 64) == cache_bytes(api, 2, 4096)  # O(1) state
+
+
+# ---------------------------------------------------------------------------
+# Seed-engine regression fixes (ISSUE 9 satellites)
+# ---------------------------------------------------------------------------
+
+
+def _engine_and_prompts(rng, arch="qwen2-1.5b", batch=2, plen=6):
+    cfg = get_config(arch).reduced()
+    api = get_model(cfg)
+    params = api.init(rng)
+    eng = ServingEngine(cfg, params, batch=batch, capacity=32)
+    prompts = np.random.default_rng(3).integers(
+        0, cfg.vocab_size, (batch, plen), dtype=np.int32
+    )
+    return cfg, params, eng, prompts
+
+
+@pytest.mark.parametrize("arch", ["qwen2-1.5b", "rwkv6-1.6b"])
+def test_generate_resets_state_between_batches(arch, rng):
+    """Two sequential generate() calls == two fresh engines: the KV state
+    must not leak from the first batch into the second."""
+    cfg, params, eng, prompts = _engine_and_prompts(rng, arch)
+    first = eng.generate(prompts, max_new_tokens=5)
+    second = eng.generate(prompts, max_new_tokens=5)
+    fresh = ServingEngine(cfg, params, batch=2, capacity=32)
+    want = fresh.generate(prompts, max_new_tokens=5)
+    np.testing.assert_array_equal(first, want)
+    np.testing.assert_array_equal(second, want)
+
+
+def test_no_wasted_trailing_decode(rng):
+    """Exiting via max_new_tokens must not run (or count) a decode step
+    whose logits are discarded: n tokens need exactly n-1 decode steps."""
+    _, _, eng, prompts = _engine_and_prompts(rng)
+    eng.generate(prompts, max_new_tokens=6)
+    assert eng.stats.decode_steps == 5
+    eng.generate(prompts, max_new_tokens=1)  # prefill-only: zero steps
+    assert eng.stats.decode_steps == 5
+
+
+def test_post_eos_rows_masked_and_frozen(rng):
+    """A finished row emits eos_id (not lane garbage) for the rest of the
+    batch's decode, and unfinished rows are unaffected by the masking."""
+    _, _, eng, prompts = _engine_and_prompts(rng, batch=2)
+    free = eng.generate(prompts, max_new_tokens=6)
+    # force row 0 to finish at its second emitted token
+    eos = int(free[0, 1])
+    out = eng.generate(prompts, max_new_tokens=6, eos_id=eos)
+    row = list(out[0])
+    k = row.index(eos)
+    assert all(t == eos for t in row[k:]), "post-EOS output not masked"
+    # row 1 decodes on, unchanged, until/unless it emits eos itself
+    for a, b in zip(out[1], free[1]):
+        assert a == b
+        if a == eos:
+            break
+
+
+def test_fused_prefill_compiles_once(rng):
+    """Repeated same-shape prefills reuse one cached jitted callable."""
+    _, _, eng, prompts = _engine_and_prompts(rng)
+    for _ in range(3):
+        eng.prefill(prompts)
+    assert eng.prefill_compiles == 1
+    assert eng.stats.prefills == 3
+
+
+def test_tokens_per_s_counts_live_rows(rng):
+    """Throughput counts tokens (live rows x steps), not batch steps."""
+    _, _, eng, prompts = _engine_and_prompts(rng, batch=2)
+    free = eng.generate(prompts, max_new_tokens=6)
+    assert eng.stats.decode_tokens == 2 * eng.stats.decode_steps
+    assert eng.stats.tokens_per_s > 0
+    # finish row 0 early: the remaining steps produce one live token each
+    eos = int(free[0, 1])
+    eng2 = ServingEngine(eng.cfg, eng.params, batch=2, capacity=32)
+    eng2.generate(prompts, max_new_tokens=6, eos_id=eos)
+    assert eng2.stats.decode_tokens < 2 * eng2.stats.decode_steps
+
+
+# ---------------------------------------------------------------------------
+# Paged-allocator invariants (ISSUE 9 tentpole)
+# ---------------------------------------------------------------------------
+
+
+def test_page_allocator_alloc_free_invariants():
+    al = PageAllocator(n_pages=9, page_tokens=4)  # 8 usable pages
+    a = al.alloc("a", 10)  # 3 pages
+    b = al.alloc("b", 4)   # 1 page
+    assert len(a) == 3 and len(b) == 1
+    assert not set(a) & set(b), "page owned by two live requests"
+    al.check_invariants()
+    assert al.alloc("c", 100) is None  # exhaustion queues, never corrupts
+    al.check_invariants()
+    freed = al.free("a")
+    assert freed == 3 and al.free_pages == 7
+    al.check_invariants()
+    # freed pages are reusable; double-alloc under one id is an error
+    c = al.alloc("c", 17)  # 5 pages, needs a's returned ones
+    assert c is not None and not set(c) & set(b)
+    with pytest.raises(ValueError):
+        al.alloc("c", 4)
+    al.check_invariants()
+
+
+def test_page_allocator_grow_and_scratch():
+    from repro.serve.kvcache import SCRATCH_PAGE
+
+    al = PageAllocator(n_pages=5, page_tokens=4)
+    t = al.alloc("r", 4)
+    assert SCRATCH_PAGE not in t
+    grown = al.grow("r", 12)  # 3 pages total
+    assert len(grown) == 3 and grown[:1] == t
+    assert al.grow("r", 1000) is None  # exhaustion: caller waits or retires
+    al.check_invariants()
+    al.free("r")
+    assert al.used_pages == 0

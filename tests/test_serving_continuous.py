@@ -1,0 +1,289 @@
+"""Continuous batching, paged KV, disaggregation, request-level admission.
+
+ISSUE 9 tentpole coverage: the continuous engine must be greedy-equivalent
+to the fixed-batch engine, reuse lanes and pages across a request stream,
+be invariant to *which* physical pages a request lands on, place prefill
+and decode on verifiably disjoint submeshes, and defer (never drop)
+requests the page pool or the admission sweep can't take yet.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.core.multiplex import BgTenant, Collocator, InterferenceModel, MultiplexConfig
+from repro.core.plan import serving_plan
+from repro.models import get_model
+from repro.serve.engine import ContinuousBatchingEngine, ServingEngine
+from repro.serve.kvcache import (
+    SCRATCH_PAGE,
+    cache_to_pages,
+    gather_view,
+    init_paged_cache,
+    scatter_token,
+    write_pages,
+)
+from repro.serve.scheduler import (
+    ContinuousScheduler,
+    Request,
+    ServingAdmission,
+    VirtualClock,
+)
+
+
+@pytest.fixture(scope="module")
+def serving_setup(rng):
+    cfg = get_config("qwen2-1.5b").reduced()
+    api = get_model(cfg)
+    params = api.init(rng)
+    return cfg, api, params
+
+
+def _requests(cfg, n, plen=6, max_new=5, stagger=0.0, seed=5):
+    gen = np.random.default_rng(seed)
+    return [
+        Request(
+            rid=i,
+            prompt=gen.integers(0, cfg.vocab_size, (plen,), dtype=np.int32),
+            max_new_tokens=max_new,
+            arrival=stagger * i,
+        )
+        for i in range(n)
+    ]
+
+
+# ---------------------------------------------------------------------------
+# Continuous engine
+# ---------------------------------------------------------------------------
+
+
+def test_continuous_matches_fixed_batch_greedy(serving_setup):
+    """Same prompts through the paged continuous engine and the contiguous
+    fixed-batch engine produce identical greedy tokens."""
+    cfg, _, params = serving_setup
+    reqs = _requests(cfg, 2)
+    fixed = ServingEngine(cfg, params, batch=2, capacity=32)
+    want = fixed.generate(np.stack([r.prompt for r in reqs]), 5)
+    eng = ContinuousBatchingEngine(cfg, params, lanes=2, n_pages=17,
+                                   page_tokens=4, lane_capacity=16)
+    rep = ContinuousScheduler(eng).run(reqs)
+    got = np.stack([np.array(r.tokens) for r in
+                    sorted(rep.completed, key=lambda r: r.rid)])
+    np.testing.assert_array_equal(got, want)
+
+
+def test_staggered_arrivals_reuse_lanes_and_pages(serving_setup):
+    """More requests than lanes: retired lanes are refilled mid-decode and
+    every page returns to the pool afterwards."""
+    cfg, _, params = serving_setup
+    eng = ContinuousBatchingEngine(cfg, params, lanes=2, n_pages=9,
+                                   page_tokens=4, lane_capacity=16)
+    reqs = _requests(cfg, 5, max_new=4, stagger=1e-4)
+    rep = ContinuousScheduler(eng).run(reqs)
+    assert len(rep.completed) == 5
+    assert all(len(r.tokens) == 4 for r in rep.completed)
+    assert eng.stats.prefills == 5  # 5 requests through 2 lanes
+    eng.alloc.check_invariants()
+    assert eng.alloc.used_pages == 0, "pages not returned on finish"
+    # per-request records are monotone: admit <= first token <= finish
+    for r in rep.completed:
+        assert r.arrival <= r.admitted_at <= r.first_token_at <= r.finished_at
+
+
+def test_continuous_engine_output_stable_across_lane_assignment(serving_setup):
+    """A request's tokens don't depend on which lane/pages it lands on:
+    replaying the same trace with different lane counts agrees."""
+    cfg, _, params = serving_setup
+    outs = []
+    for lanes in (2, 3):
+        eng = ContinuousBatchingEngine(cfg, params, lanes=lanes, n_pages=17,
+                                       page_tokens=4, lane_capacity=16)
+        rep = ContinuousScheduler(eng).run(_requests(cfg, 4, max_new=4))
+        outs.append({r.rid: tuple(r.tokens) for r in rep.completed})
+    assert outs[0] == outs[1]
+
+
+def test_page_pool_exhaustion_defers_never_drops(serving_setup):
+    """A pool too small for all requests at once still completes them all —
+    requests wait for pages, they are not dropped."""
+    cfg, _, params = serving_setup
+    # 4 usable pages; each request needs 3 (6 prompt + 4 new over 4-token
+    # pages) -> only one fits at a time
+    eng = ContinuousBatchingEngine(cfg, params, lanes=2, n_pages=5,
+                                   page_tokens=4, lane_capacity=12)
+    sched = ContinuousScheduler(eng)
+    rep = sched.run(_requests(cfg, 3, max_new=4))
+    assert len(rep.completed) == 3
+    assert rep.page_deferrals > 0
+    eng.alloc.check_invariants()
+    assert eng.alloc.used_pages == 0
+
+
+def test_oversize_request_rejected_upfront(serving_setup):
+    cfg, _, params = serving_setup
+    eng = ContinuousBatchingEngine(cfg, params, lanes=1, n_pages=5,
+                                   page_tokens=4, lane_capacity=8)
+    big = _requests(cfg, 1, plen=7, max_new=8)  # 15 tokens > 8 capacity
+    with pytest.raises(ValueError, match="lanes hold"):
+        ContinuousScheduler(eng).run(big)
+
+
+# ---------------------------------------------------------------------------
+# Paged gather/scatter
+# ---------------------------------------------------------------------------
+
+
+def test_gather_view_invariant_to_page_permutation(serving_setup):
+    """The contiguous view a request sees depends only on its page *table
+    order*, not on which physical pages it holds."""
+    cfg, api, params = serving_setup
+    toks = np.arange(8, dtype=np.int32)[None, :]
+    _, cache = api.prefill(params, jnp.asarray(toks), 8)
+    chunks = cache_to_pages(cache, 4)  # 2 pages of 4 tokens
+    for pages in ([1, 2], [5, 3]):
+        pool = write_pages(init_paged_cache(api, 9, 4), pages, chunks)
+        view = gather_view(pool, jnp.asarray([pages], jnp.int32))
+        v = jax.tree.leaves(view)[0]
+        want = jax.tree.leaves(cache)[0]
+        np.testing.assert_allclose(np.asarray(v), np.asarray(want))
+
+
+def test_scatter_token_lands_in_owned_page_only(serving_setup):
+    """scatter_token writes lane b's appended KV at (page, offset) of its
+    own table; a dead lane (all-scratch table) writes only to scratch."""
+    cfg, api, params = serving_setup
+    pool = init_paged_cache(api, 9, 4)
+    tables = jnp.asarray([[3, 7], [SCRATCH_PAGE, SCRATCH_PAGE]], jnp.int32)
+    lens = jnp.asarray([5, 0], jnp.int32)  # lane 0 appends at page 7, slot 1
+    view = gather_view(pool, tables)
+    view = jax.tree.map(lambda v: v + 1.0, view)  # distinctive nonzero KV
+    out = scatter_token(pool, view, tables, lens)
+    leaf = np.asarray(jax.tree.leaves(out)[0])
+    assert np.all(leaf[:, 7, 1] != 0.0), "live lane's write missing"
+    assert np.all(leaf[:, [1, 2, 3, 4, 5, 6, 8]][:, :, [0, 2, 3]] == 0.0)
+    assert np.all(leaf[:, 7, [0, 2, 3]] == 0.0)
+    # the dead lane's write landed in scratch, nowhere else
+    assert np.all(leaf[:, SCRATCH_PAGE, 1:] == 0.0)
+
+
+# ---------------------------------------------------------------------------
+# Disaggregation
+# ---------------------------------------------------------------------------
+
+
+def test_serving_plan_shape():
+    plan = serving_plan(8, 3, prefill_time=0.5)
+    gaps = plan.gaps()
+    assert len(gaps) == 1 and gaps[0].free_gpus == 5
+    assert plan.free_device_ranges(0) == [(3, 8)]
+    with pytest.raises(ValueError):
+        serving_plan(8, 8)
+    with pytest.raises(ValueError):
+        serving_plan(8, 0)
+
+
+@pytest.mark.skipif(len(jax.devices()) < 2, reason="needs >= 2 devices")
+def test_split_mesh_for_serving_disjoint():
+    from repro.launch.mesh import split_mesh_for_serving
+
+    n = len(jax.devices())
+    sm = split_mesh_for_serving(n // 2)
+    assert sm.prefill_range == (0, n // 2)
+    assert sm.disjoint() and sm.device_sets_disjoint()
+
+
+@pytest.mark.skipif(len(jax.devices()) < 2, reason="needs >= 2 devices")
+def test_disaggregated_engine_matches_collocated(serving_setup):
+    """Prefill on one carving, decode on the other, handoff in between —
+    tokens identical to the single-mesh engine."""
+    from repro.launch.mesh import split_mesh_for_serving
+
+    cfg, _, params = serving_setup
+    sm = split_mesh_for_serving(1, devices=jax.devices()[:2])
+    base = ContinuousBatchingEngine(cfg, params, lanes=2, n_pages=17,
+                                    page_tokens=4, lane_capacity=16)
+    want = ContinuousScheduler(base).run(_requests(cfg, 3, max_new=4))
+    eng = ContinuousBatchingEngine(cfg, params, lanes=2, n_pages=17,
+                                   page_tokens=4, lane_capacity=16,
+                                   submeshes=sm)
+    got = ContinuousScheduler(eng).run(_requests(cfg, 3, max_new=4))
+    assert ({r.rid: tuple(r.tokens) for r in got.completed}
+            == {r.rid: tuple(r.tokens) for r in want.completed})
+
+
+# ---------------------------------------------------------------------------
+# Request-level admission
+# ---------------------------------------------------------------------------
+
+
+def test_admission_tight_bound_rejects_marginal_request():
+    """Under a density-aware interference fit, a tight TTFT SLO admits a
+    strict, nonzero prefix of the candidate requests."""
+    adm = ServingAdmission(
+        8, 4, prefill_time=10e-3, decode_step_time=1e-3,
+        ttft_slo=12.4e-3,  # allows 1.24x prefill inflation
+        interference=InterferenceModel(gap_inflation=1.2, density_slope=0.5),
+    )
+    dec = adm.max_concurrent(4)
+    assert 0 < dec.n_admitted < 4
+    # the bound is respected along the predicted curve
+    for k, slowdown, _ in dec.curve[: dec.n_admitted + 1]:
+        assert slowdown <= adm.bound + 1e-9
+
+
+def test_admission_loose_bound_admits_all():
+    """With no measured interference, each extra request adds gap work at
+    zero predicted cost, so a loose SLO admits every candidate (throughput
+    ties go to the larger roster)."""
+    adm = ServingAdmission(
+        8, 4, prefill_time=10e-3, decode_step_time=1e-3,
+        ttft_slo=100e-3, interference=InterferenceModel(),
+    )
+    assert adm.max_concurrent(4).n_admitted == 4
+
+
+def test_fit_interference_recovers_base_and_slope():
+    iso = 10e-3
+    model = InterferenceModel(gap_inflation=1.3, density_slope=0.5)
+    samples = [(d, iso * model.gap_inflation_at(0, d)) for d in (1.0, 2.0, 3.0)]
+    fit = ServingAdmission.fit_interference(iso, samples)
+    assert fit.gap_inflation == pytest.approx(1.3, rel=1e-6)
+    assert fit.density_slope == pytest.approx(0.5, rel=1e-6)
+
+
+def test_scheduler_admission_defers_but_completes(serving_setup):
+    """An admission sweep that only allows one concurrent request still
+    serves the whole trace (deferred, not dropped)."""
+    cfg, _, params = serving_setup
+    eng = ContinuousBatchingEngine(cfg, params, lanes=3, n_pages=17,
+                                   page_tokens=4, lane_capacity=16)
+    adm = ServingAdmission(
+        8, 4, prefill_time=10e-3, decode_step_time=1e-3,
+        ttft_slo=10.5e-3,  # barely above isolated prefill: nearly fg-only
+        interference=InterferenceModel(gap_inflation=1.5, density_slope=1.0),
+    )
+    sched = ContinuousScheduler(eng, admission=adm, clock=VirtualClock())
+    rep = sched.run(_requests(cfg, 4, max_new=3))
+    assert len(rep.completed) == 4
+    assert rep.admission_deferrals > 0
+    assert eng.alloc.used_pages == 0
+
+
+def test_collocator_set_tenants_preserves_state():
+    plan = serving_plan(8, 4, prefill_time=10e-3)
+    col = Collocator(plan, MultiplexConfig(bg_step_time=1e-3),
+                     interference=InterferenceModel(gap_inflation=1.7,
+                                                    density_slope=0.3))
+    sim, quantum = col._sim, col.bg_step_quantum
+    col._deficits[0] = 0.5
+    col.set_tenants([BgTenant("b", priority=1), BgTenant("a", priority=5)])
+    assert [t.job for t in col.tenants] == ["a", "b"]  # re-sorted
+    assert col._sim is sim and col.bg_step_quantum == quantum
+    assert col.interference.gap_inflation == 1.7
+    assert col._deficits[0] == 0.5  # positional deficits survive re-rostering
+    # the re-rostered collocator admits without rebuilds, sweeping the new
+    # roster, and the predicted slowdown reflects the preserved 1.7x model
+    dec = col.admit(max_fg_slowdown=2.0)
+    assert [k for k, _, _ in dec.curve] == [0, 1, 2]
+    assert dec.curve[1][1] == pytest.approx(1.7, rel=1e-6)
