@@ -147,6 +147,7 @@ def smoke(record: bool = False, gate: bool = True) -> int:
     cont = ContinuousBatchingEngine(
         cfg, params, lanes=LANES, n_pages=N_PAGES, page_tokens=PAGE_TOKENS,
         lane_capacity=LANE_CAPACITY, submeshes=submeshes,
+        debug_checks=True,  # page accounting re-checked after every op
     )
     fixed = ServingEngine(cfg, params, batch=LANES,
                           capacity=pmax + new_max)

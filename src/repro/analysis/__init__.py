@@ -1,0 +1,28 @@
+"""Static analysis passes over the burst-parallel runtime (ISSUE 10).
+
+Four passes, all runnable with zero accelerators:
+
+- ``verify``     — pure-metadata plan/submesh verifier (device-range
+                   disjointness, coverage, quantum alignment, amp limits).
+- ``shardcheck`` — sharding-rule sweep over every config x every mesh shape
+                   reachable by ``largest_pow2_mesh`` after a failure.
+- ``protocheck`` — bounded-interleaving model checker for the transport
+                   control plane (lease election, cursor safety, GC).
+- ``lint``       — AST linter for the JAX hazards this repo has shipped
+                   (per-call jit, wall-clock in virtual-clock modules,
+                   asserts on traced values, unknown pspec axes).
+
+Each pass is a module with a ``main()`` CLI (``python -m
+repro.analysis.<pass>``) and a library entry point returning structured
+``Violation`` reports; the ``static-analysis`` CI job runs all four.
+"""
+from repro.analysis.verify import (  # noqa: F401
+    PlanVerificationError,
+    Violation,
+    verify_carving,
+    verify_plan,
+    verify_plan_or_raise,
+    verify_serving_submeshes,
+    verify_stage_shardings,
+    verify_submeshes,
+)

@@ -1,0 +1,231 @@
+"""Static sharding sweep: every config x every post-failure mesh shape.
+
+``sharding_rules``/``pspec`` are pure functions of ``mesh.axis_names`` and
+``mesh.devices.shape``, so the whole rule surface can be validated against
+abstract mesh stand-ins — no devices, no compilation.  This catches the
+"config only breaks after a 7-device re-carve" class statically: the sweep
+enumerates every (data, model) shape ``largest_pow2_mesh``/
+``remesh_for_pool`` can produce for pool sizes 1–64 (the shapes the elastic
+control plane actually re-carves onto after failures) and, for every
+registered config and shape kind, checks the produced ``PartitionSpec``
+trees uphold the engine's three invariants *by construction output*, not by
+trusting the derivation:
+
+  - every sharded dim is divisible by its mesh-axes product;
+  - no mesh axis shards two dims of one array;
+  - specs never exceed the array rank, and only name axes on the mesh.
+
+It also cross-checks the vocabulary in both directions: rules may only map
+to declared mesh axes ({pod, data, model}), and every logical axis named by
+a model schema must be known to the rules engine (a typo'd logical axis
+silently replicates).  Divisibility *drops* recorded by ``RuleReport`` are
+expected degradation (the guard working), reported as statistics, not
+violations.
+
+Run as ``python -m repro.analysis.shardcheck`` (exit 1 on violations).
+"""
+from __future__ import annotations
+
+import argparse
+import math
+import sys
+from typing import Dict, Iterable, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.analysis.verify import Violation
+
+MESH_AXIS_VOCAB = frozenset({"pod", "data", "model"})
+DEFAULT_POOL_RANGE = range(1, 65)
+
+
+class AbstractMesh:
+    """Stand-in with the only two attributes the rules engine reads."""
+
+    def __init__(self, shape: Tuple[int, ...],
+                 axis_names: Tuple[str, ...] = ("data", "model")):
+        assert len(shape) == len(axis_names)
+        self.axis_names = tuple(axis_names)
+        # int8 keeps the stand-in tiny; only .shape is ever read
+        self.devices = np.empty(shape, dtype=np.int8)
+
+    def __repr__(self) -> str:
+        return "x".join(
+            f"{a}={n}" for a, n in zip(self.axis_names, self.devices.shape))
+
+
+def reachable_mesh_shapes(
+        pool_sizes: Iterable[int] = DEFAULT_POOL_RANGE,
+) -> List[Tuple[int, int]]:
+    """Every (data, model) shape the elastic re-carve can produce."""
+    from repro.launch.mesh import pow2_mesh_shape
+
+    return sorted({pow2_mesh_shape(n) for n in pool_sizes})
+
+
+def _spec_entries(spec) -> List[Tuple[int, Tuple[str, ...]]]:
+    """(dim_index, mesh_axes) for each sharded dim of a PartitionSpec."""
+    out = []
+    for i, part in enumerate(tuple(spec)):
+        if part is None:
+            continue
+        axes = (part,) if isinstance(part, str) else tuple(part)
+        out.append((i, axes))
+    return out
+
+
+def check_spec(spec, shape: Sequence[int], sizes: Dict[str, int],
+               where: str) -> List[Violation]:
+    """Validate one produced PartitionSpec against the engine invariants."""
+    out: List[Violation] = []
+    entries = _spec_entries(spec)
+    if len(tuple(spec)) > len(shape):
+        out.append(Violation(
+            "shard-rank", where,
+            f"spec {spec} has {len(tuple(spec))} entries for rank-"
+            f"{len(shape)} array"))
+        return out
+    used: List[str] = []
+    for dim_idx, axes in entries:
+        for a in axes:
+            if a not in sizes:
+                out.append(Violation(
+                    "shard-axis", where,
+                    f"spec {spec} names mesh axis {a!r} not on the mesh "
+                    f"(axes: {sorted(sizes)})"))
+            elif a in used:
+                out.append(Violation(
+                    "shard-reuse", where,
+                    f"mesh axis {a!r} shards two dims of one array "
+                    f"(spec {spec})"))
+            used.append(a)
+        total = int(math.prod(sizes.get(a, 1) for a in axes))
+        if total > 1 and shape[dim_idx] % total != 0:
+            out.append(Violation(
+                "shard-divisibility", where,
+                f"dim {dim_idx} (size {shape[dim_idx]}) sharded over "
+                f"{axes} (product {total}) without dividing"))
+    return out
+
+
+def check_cell(cfg, shape_cfg, mesh) -> Tuple[List[Violation], int]:
+    """One (config, shape kind, mesh shape) cell.
+
+    Returns (violations, n_dropped) — drops are the divisibility guard
+    declining to shard, which is expected degradation at odd pool sizes.
+    """
+    import jax
+
+    from repro.dist.sharding import (RuleReport, batch_pspecs,
+                                     mesh_axis_sizes, pspec, sharding_rules)
+    from repro.models.api import get_model, input_specs
+    from repro.models.layers import is_spec
+
+    sizes = mesh_axis_sizes(mesh)
+    rules = sharding_rules(cfg, mesh, shape_cfg)
+    kind = shape_cfg.kind if shape_cfg is not None else "train"
+    cell = f"{cfg.name}/{kind}@{mesh!r}"
+    out: List[Violation] = []
+
+    # rule vocabulary: only declared mesh axes may appear on the RHS
+    for logical, axes in rules.items():
+        for a in axes:
+            if a not in MESH_AXIS_VOCAB:
+                out.append(Violation(
+                    "shard-vocab", f"{cell} rule {logical!r}",
+                    f"maps to undeclared mesh axis {a!r}"))
+
+    api = get_model(cfg)
+    report = RuleReport()
+
+    def check_tree(tree, label: str) -> None:
+        leaves_with_paths = jax.tree_util.tree_flatten_with_path(
+            tree, is_leaf=is_spec)[0]
+        for path, s in leaves_with_paths:
+            if not is_spec(s):
+                continue
+            where = f"{cell} {label}{jax.tree_util.keystr(path)}"
+            for ax in s.axes:
+                if ax is not None and ax not in rules:
+                    out.append(Violation(
+                        "shard-logical", where,
+                        f"schema names unknown logical axis {ax!r} — it "
+                        f"would silently replicate"))
+            spec = pspec(s.axes, s.shape, rules, mesh, report)
+            out.extend(check_spec(spec, s.shape, sizes, where))
+
+    check_tree(api.schema, "params")
+
+    # model inputs (and, for decode, the paged cache schema) go through the
+    # same machinery batch_pspecs uses at jit time
+    if shape_cfg is not None:
+        specs = input_specs(cfg, shape_cfg)
+        bspecs = batch_pspecs(cfg, shape_cfg, rules, mesh, specs, report)
+        flat = jax.tree_util.tree_flatten_with_path(bspecs)[0]
+        spec_shapes = {
+            jax.tree_util.keystr(p): v.shape
+            for p, v in jax.tree_util.tree_flatten_with_path(specs)[0]
+        }
+        if "cache" in specs:
+            schema = api.cache_schema(shape_cfg.global_batch,
+                                      shape_cfg.seq_len)
+            for p, s in jax.tree_util.tree_flatten_with_path(
+                    schema, is_leaf=is_spec)[0]:
+                spec_shapes[f"['cache']{jax.tree_util.keystr(p)}"] = s.shape
+        for path, spec in flat:
+            key = jax.tree_util.keystr(path)
+            shp = spec_shapes.get(key)
+            if shp is None:
+                continue
+            out.extend(check_spec(
+                spec, shp, sizes, f"{cell} inputs{key}"))
+    return out, len(report.dropped)
+
+
+def sweep(config_names: Optional[Sequence[str]] = None,
+          pool_sizes: Iterable[int] = DEFAULT_POOL_RANGE,
+          ) -> Tuple[List[Violation], Dict[str, int]]:
+    """The full static sweep.  Returns (violations, stats)."""
+    from repro.configs import get_config, list_configs, shapes_for
+
+    names = list(config_names) if config_names else list_configs()
+    shapes = reachable_mesh_shapes(pool_sizes)
+    violations: List[Violation] = []
+    stats = {"cells": 0, "dropped": 0, "mesh_shapes": len(shapes),
+             "configs": len(names)}
+    for name in names:
+        cfg = get_config(name)
+        shape_cfgs = [None] + list(shapes_for(cfg))
+        for (data, model) in shapes:
+            mesh = AbstractMesh((data, model))
+            for sc in shape_cfgs:
+                vs, dropped = check_cell(cfg, sc, mesh)
+                violations.extend(vs)
+                stats["cells"] += 1
+                stats["dropped"] += dropped
+    return violations, stats
+
+
+def main(argv: Optional[Sequence[str]] = None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.analysis.shardcheck",
+        description="static sharding sweep over every config x every "
+                    "post-failure mesh shape (1-64 devices)")
+    ap.add_argument("--configs", nargs="*", default=None,
+                    help="subset of config names (default: all registered)")
+    ap.add_argument("--max-pool", type=int, default=64)
+    args = ap.parse_args(argv)
+    violations, stats = sweep(args.configs,
+                              pool_sizes=range(1, args.max_pool + 1))
+    for v in violations:
+        print(v)
+    print(
+        f"shardcheck: {stats['configs']} configs x "
+        f"{stats['mesh_shapes']} mesh shapes, {stats['cells']} cells, "
+        f"{stats['dropped']} divisibility drops (expected degradation), "
+        f"{len(violations)} violation(s)", file=sys.stderr)
+    return 1 if violations else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

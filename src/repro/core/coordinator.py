@@ -9,6 +9,7 @@ pure function of (graph, G, amp_limit).
 from __future__ import annotations
 
 import dataclasses
+import os
 import time
 from dataclasses import dataclass, field
 from typing import Callable, Dict, List, Optional
@@ -76,11 +77,19 @@ class ClusterCoordinator:
 
     def __init__(self, num_devices: int, hw: Optional[Hardware] = None, *,
                  clock: Optional[Callable[[], float]] = None,
-                 virtual_devices: bool = False):
+                 virtual_devices: bool = False,
+                 verify_plans: Optional[bool] = None):
         self.num_devices = num_devices
         self.hw = hw or Hardware()
         self._clock = clock or time.time
         self.virtual_devices = virtual_devices
+        # every installed/re-planned plan goes through the static verifier
+        # (repro.analysis.verify) — O(layers + stages) pure metadata, so it
+        # is on by default; REPRO_VERIFY_PLANS=0 (or verify_plans=False)
+        # turns it off for hot replay loops that re-plan thousands of times
+        if verify_plans is None:
+            verify_plans = os.environ.get("REPRO_VERIFY_PLANS", "1") != "0"
+        self.verify_plans = verify_plans
         self.healthy = set(range(num_devices))
         self.jobs: Dict[str, Job] = {}
         self.events: List[ClusterEvent] = []
@@ -100,6 +109,7 @@ class ClusterCoordinator:
         job.devices = tuple(sorted(self.healthy))
         job.status = "running"
         self.jobs[job.name] = job
+        self._verify_installed(job.plan, f"submit_foreground({job.name})")
         return job.plan
 
     def submit_background(self, job: Job) -> None:
@@ -150,6 +160,20 @@ class ClusterCoordinator:
         discarding ~half the survivors."""
         return len(self.healthy)
 
+    def _verify_installed(self, plan: Optional[BurstPlan],
+                          context: str) -> None:
+        """Statically verify a just-installed plan against the current pool
+        (range disjointness, coverage, amp limits, survivor-pool exactness
+        — ``repro.analysis.verify``).  Debug-gated via ``verify_plans``;
+        raises ``PlanVerificationError`` so a planner regression fails at
+        install time instead of surfacing as silent throughput loss."""
+        if plan is None or not self.verify_plans:
+            return
+        from repro.analysis.verify import verify_plan_or_raise
+
+        verify_plan_or_raise(plan, pool_size=len(self.healthy),
+                             context=context)
+
     # -- elasticity / fault handling ---------------------------------------
 
     def handle_failure(self, device_id: int) -> Optional[BurstPlan]:
@@ -171,6 +195,7 @@ class ClusterCoordinator:
         self.events.append(
             ClusterEvent(self._clock(), "replan", f"G={fg.plan.num_gpus}")
         )
+        self._verify_installed(fg.plan, f"handle_failure({device_id})")
         return fg.plan
 
     def handle_join(self, device_ids) -> Optional[BurstPlan]:
@@ -195,6 +220,7 @@ class ClusterCoordinator:
         fg.plan = make_plan(fg.graph, self._usable_devices(), fg.amp_limit, self.hw)
         fg.devices = tuple(sorted(self.healthy))
         self._drop_stale_measurements(old, fg.plan)
+        self._verify_installed(fg.plan, f"handle_join(+{len(new)})")
         return fg.plan
 
     def restore_pool(self, devices) -> None:
@@ -218,6 +244,7 @@ class ClusterCoordinator:
                                 fg.amp_limit, self.hw)
             fg.devices = tuple(sorted(self.healthy))
             self._drop_stale_measurements(old, fg.plan)
+            self._verify_installed(fg.plan, "restore_pool")
 
     def handle_departure(self, name: str) -> bool:
         """Tenant churn: a running job finishes/leaves the cluster.  The job

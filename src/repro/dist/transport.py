@@ -542,9 +542,13 @@ class CoordinatorLoop:
         if self.coordinator is not None and pool is not None:
             self.coordinator.restore_pool(pool)
         hb_lw = self.transport.low_water(HEARTBEAT_TOPIC)
-        beats = sorted(self.transport.poll(
-            HEARTBEAT_TOPIC, max(hb_lw, self._seen_beats)),
-            key=lambda sp: sp[0])
+        # never leave the cursor below the compacted low-water mark: if the
+        # old holder compacted every beat and none arrived since, the first
+        # pump() after failover would poll below low-water (a strict
+        # transport raises) — flushed out by repro.analysis.protocheck
+        self._seen_beats = max(self._seen_beats, hb_lw)
+        beats = sorted(self.transport.poll(HEARTBEAT_TOPIC, self._seen_beats),
+                       key=lambda sp: sp[0])
         seen: Dict[int, int] = {}
         for seq, m in beats:
             self._seen_beats = max(self._seen_beats, seq + 1)

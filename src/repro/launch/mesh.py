@@ -35,15 +35,13 @@ def make_mesh(data: int, model: int, pod: int = 1, devices: Optional[Sequence] =
     return jax.make_mesh((data, model), ("data", "model"), devices=devices)
 
 
-def largest_pow2_mesh(n_devices: int, devices: Optional[Sequence] = None):
-    """Elastic re-mesh: the largest (data, model) mesh that fits n_devices,
-    favoring the data axis 4:1 (used after failures).  The model axis stays
-    a power of two — sharding rules genuinely need it to divide head/hidden
-    dims — but the data axis is just a batch split, so a non-power-of-two
-    survivor count keeps every device the model width allows (7 survivors
-    -> 7x1, not 4x1; the planner's scale set covers non-pow2 pools too).
-    Only a sub-``model`` remainder is ever left out of the mesh, and only
-    when a narrower model axis would not cover more devices."""
+def pow2_mesh_shape(n_devices: int) -> Tuple[int, int]:
+    """The (data, model) shape ``largest_pow2_mesh`` would build — pure
+    arithmetic, no jax device state, so the static sharding sweep
+    (``repro.analysis.shardcheck``) can enumerate every mesh shape reachable
+    after a failure without constructing a single device."""
+    if n_devices < 1:
+        raise ValueError(f"need at least one device, got {n_devices}")
     cap = 1
     while cap * cap * 4 <= pow2_floor(n_devices):
         cap *= 2
@@ -54,7 +52,19 @@ def largest_pow2_mesh(n_devices: int, devices: Optional[Sequence] = None):
         m *= 2
     # widest model axis within the 4:1 bound that maximizes device coverage
     model = max(candidates, key=lambda m: (n_devices // m * m, m))
-    data = n_devices // model
+    return n_devices // model, model
+
+
+def largest_pow2_mesh(n_devices: int, devices: Optional[Sequence] = None):
+    """Elastic re-mesh: the largest (data, model) mesh that fits n_devices,
+    favoring the data axis 4:1 (used after failures).  The model axis stays
+    a power of two — sharding rules genuinely need it to divide head/hidden
+    dims — but the data axis is just a batch split, so a non-power-of-two
+    survivor count keeps every device the model width allows (7 survivors
+    -> 7x1, not 4x1; the planner's scale set covers non-pow2 pools too).
+    Only a sub-``model`` remainder is ever left out of the mesh, and only
+    when a narrower model axis would not cover more devices."""
+    data, model = pow2_mesh_shape(n_devices)
     if devices is not None:
         devices = list(devices)[: data * model]
     return make_mesh(data, model, devices=devices)

@@ -185,7 +185,7 @@ class ContinuousBatchingEngine:
 
     def __init__(self, cfg, params, *, lanes: int, n_pages: int,
                  page_tokens: int = 16, lane_capacity: int = 128,
-                 submeshes=None):
+                 submeshes=None, debug_checks: bool = False):
         if cfg.block_type not in ("attn_mlp", "moe"):
             raise ValueError(
                 f"paged serving needs a KV-cache family, got {cfg.block_type}"
@@ -197,6 +197,10 @@ class ContinuousBatchingEngine:
         self.max_pages = -(-lane_capacity // page_tokens)
         self.lane_capacity = self.max_pages * page_tokens
         self.alloc = PageAllocator(n_pages, page_tokens)
+        # page-accounting invariants re-checked after every mutating op
+        # (admit/step/retire/reset) — cheap O(pages) sets, off by default,
+        # on in tests and the bench smoke lane
+        self.debug_checks = debug_checks
         self.submeshes = submeshes
         if submeshes is not None:
             self.params_prefill = _replicate(params, submeshes.prefill_mesh)
@@ -241,6 +245,11 @@ class ContinuousBatchingEngine:
         self.lane_tok[:] = 0
         self.lane_req = [None] * self.lanes
         self.stats = ServeStats()
+        self._debug_check()
+
+    def _debug_check(self) -> None:
+        if self.debug_checks:
+            self.alloc.check_invariants()
 
     # -- capacity ----------------------------------------------------------
 
@@ -314,6 +323,7 @@ class ContinuousBatchingEngine:
         self.lane_tok[lane] = first
         self.lane_req[lane] = req
         req.tokens.append(first)
+        self._debug_check()
         return True
 
     def step(self) -> List[object]:
@@ -344,6 +354,7 @@ class ContinuousBatchingEngine:
             if req.decoding_done():
                 finished.append(req)
                 self._retire_lane(lane)
+        self._debug_check()
         return finished
 
     def retire(self, req) -> None:
@@ -362,3 +373,4 @@ class ContinuousBatchingEngine:
         self.lens[lane] = 0
         self.lane_tok[lane] = 0
         self.lane_req[lane] = None
+        self._debug_check()

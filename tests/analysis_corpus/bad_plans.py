@@ -1,0 +1,251 @@
+"""Golden-violations corpus for ``repro.analysis.verify``.
+
+One minimal bad example per constructible verifier check: each entry in
+``CASES`` is ``(expected_check, thunk)`` where the thunk runs the verifier
+on a deliberately broken input and returns the violation list.  The test
+asserts every case yields at least one violation with exactly the expected
+check code — and that the same verifier stays clean on real planner output
+(``tests/test_analysis_verify.py``).
+
+Checks derived *from* the plan itself (``stage-cover``, ``gap-stage``,
+``free-busy``, ``carve-*``) guard against drift between ``BurstPlan``'s
+range algebra and the verifier's re-derivation; they cannot be seeded by
+constructing a plan (the properties hold by construction) and are covered
+by the randomized sweep instead.
+"""
+from types import SimpleNamespace
+
+import numpy as np
+
+from repro.analysis.verify import (
+    verify_plan,
+    verify_serving_submeshes,
+    verify_stage_shardings,
+    verify_submeshes,
+)
+from repro.core.plan import BranchPlacement, BurstPlan, LayerPlan, StageSharding
+
+
+def _layer(index=0, gpus=1, *, time=1.0, amp=1.0, name=None):
+    return LayerPlan(index=index, name=name or f"l{index}", gpus=gpus,
+                     time=time, comp=time, sync=0.0, comm_in=0.0, amp=amp)
+
+
+def _plan(layers, num_gpus=4, amp_limit=8.0, single_gpu_time=None,
+          block_details=None):
+    if single_gpu_time is None:
+        single_gpu_time = sum(l.time for l in layers) or 1.0
+    return BurstPlan(layers=tuple(layers), num_gpus=num_gpus,
+                     amp_limit=amp_limit, single_gpu_time=single_gpu_time,
+                     block_details=block_details or {})
+
+
+def _branch(start, end, *, branch=1, block="blk", layer_index=0):
+    return BranchPlacement(
+        block=block, branch=branch, critical=False, parallel=True,
+        time=1.0, gpus=end - start, device_start=start, device_end=end,
+        scales=(end - start,), layer_index=layer_index)
+
+
+def _good_plan(num_gpus=4):
+    # stage 0 at scale 2, stage 1 at full scale — one real gap
+    return _plan([_layer(0, 2), _layer(1, num_gpus)], num_gpus=num_gpus)
+
+
+def _fake_mesh(n):
+    return SimpleNamespace(devices=np.empty((n,), dtype=np.int8))
+
+
+# -- verify_plan ------------------------------------------------------------
+
+def bad_plan_empty():
+    return verify_plan(_plan([], num_gpus=4))
+
+
+def bad_plan_pool():
+    return verify_plan(_plan([_layer(0, 1)], num_gpus=0))
+
+
+def bad_layer_bounds():
+    # a layer claiming more devices than the plan's pool
+    return verify_plan(_plan([_layer(0, 8)], num_gpus=4))
+
+
+def bad_layer_amp():
+    return verify_plan(_plan([_layer(0, 1, amp=float("inf"))]))
+
+
+def bad_layer_amp_soft_limit():
+    # finite but past amp_limit * 1.1 — only the strict (chain-planner)
+    # contract flags it
+    return verify_plan(
+        _plan([_layer(0, 1, amp=1.0), _layer(1, 1, amp=5.0)], amp_limit=2.0,
+              single_gpu_time=100.0),
+        strict_layer_amp=True)
+
+
+def bad_plan_amp():
+    # 4 devices the whole time over a single-gpu baseline of the same
+    # duration: aggregate amplification 4 > limit 2
+    return verify_plan(
+        _plan([_layer(0, 4)], num_gpus=4, amp_limit=2.0,
+              single_gpu_time=1.0))
+
+
+def bad_pool_exact():
+    # 7 survivors must be planned as 7, never rounded down
+    return verify_plan(_good_plan(num_gpus=4), pool_size=7)
+
+
+def bad_branch_bounds():
+    return verify_plan(_plan(
+        [_layer(0, 2), _layer(1, 4)], num_gpus=4,
+        block_details={"blk": (_branch(3, 6),)}))
+
+
+def bad_branch_overlap_fg():
+    # parallel branch leaking into the fg window [0, 2) of its host stage
+    return verify_plan(_plan(
+        [_layer(0, 2), _layer(1, 4)], num_gpus=4,
+        block_details={"blk": (_branch(1, 3),)}))
+
+
+def bad_branch_overlap_pair():
+    # two parallel branches of the SAME block sharing device 4
+    return verify_plan(_plan(
+        [_layer(0, 2), _layer(1, 8)], num_gpus=8,
+        block_details={"blk": (_branch(2, 5, branch=1),
+                               _branch(4, 7, branch=2))}))
+
+
+# -- verify_submeshes -------------------------------------------------------
+
+def _fake_submeshes(plan, **kw):
+    peak = max(s.gpus for s in plan.stages())
+    base = dict(fg_range=(0, peak), fg_mesh=_fake_mesh(peak),
+                bg={}, bg_tenants={})
+    base.update(kw)
+    return SimpleNamespace(**base)
+
+
+def bad_submesh_fg():
+    plan = _good_plan()
+    return verify_submeshes(plan, _fake_submeshes(
+        plan, fg_range=(1, 3), fg_mesh=_fake_mesh(2)))
+
+
+def bad_submesh_size():
+    plan = _good_plan()
+    peak = max(s.gpus for s in plan.stages())
+    return verify_submeshes(plan, _fake_submeshes(
+        plan, fg_mesh=_fake_mesh(peak + 1)))
+
+
+def bad_submesh_stage():
+    plan = _good_plan()
+    return verify_submeshes(plan, _fake_submeshes(
+        plan, bg_tenants={9: [((2, 4), _fake_mesh(2))]}))
+
+
+def bad_submesh_overlap():
+    # tenant chunk overlapping the stage-0 fg window [0, 2)
+    plan = _good_plan()
+    sub = _fake_submeshes(
+        plan,
+        bg={0: ((1, 3), _fake_mesh(2))},
+        bg_tenants={0: [((1, 3), _fake_mesh(2))]})
+    return verify_submeshes(plan, sub)
+
+
+def bad_submesh_bounds():
+    plan = _good_plan()
+    sub = _fake_submeshes(
+        plan,
+        bg={0: ((2, 6), _fake_mesh(4))},
+        bg_tenants={0: [((2, 6), _fake_mesh(4))]})
+    return verify_submeshes(plan, sub)
+
+
+def bad_submesh_slot0():
+    # the plain bg carving must be one of the per-tenant slots
+    plan = _good_plan()
+    sub = _fake_submeshes(
+        plan,
+        bg={0: ((2, 3), _fake_mesh(1))},
+        bg_tenants={0: [((3, 4), _fake_mesh(1))]})
+    return verify_submeshes(plan, sub)
+
+
+# -- verify_serving_submeshes ----------------------------------------------
+
+def bad_serving_bounds():
+    sub = SimpleNamespace(prefill_range=(0, 5), prefill_mesh=_fake_mesh(5),
+                          decode_range=(5, 8), decode_mesh=_fake_mesh(3))
+    return verify_serving_submeshes(sub, n_devices=6)
+
+
+def bad_serving_overlap():
+    sub = SimpleNamespace(prefill_range=(0, 3), prefill_mesh=_fake_mesh(3),
+                          decode_range=(2, 6), decode_mesh=_fake_mesh(4))
+    return verify_serving_submeshes(sub, n_devices=6)
+
+
+def bad_serving_size():
+    sub = SimpleNamespace(prefill_range=(0, 2), prefill_mesh=_fake_mesh(3),
+                          decode_range=(2, 6), decode_mesh=_fake_mesh(4))
+    return verify_serving_submeshes(sub, n_devices=6)
+
+
+# -- verify_stage_shardings -------------------------------------------------
+
+def _sharding(plan, si, batch_axes=("data",), free=None):
+    st = plan.stages()[si]
+    if free is None:
+        free = tuple(plan.free_device_ranges(si))
+    return StageSharding(stage=st, batch_axes=tuple(batch_axes),
+                         model_active=True, free_ranges=tuple(free))
+
+
+def bad_sharding_count():
+    plan = _good_plan()
+    return verify_stage_shardings(
+        plan, [_sharding(plan, 0)], {"data": 2, "model": 2})
+
+
+def bad_sharding_axis():
+    plan = _good_plan()
+    shs = [_sharding(plan, 0, batch_axes=("replica",)),
+           _sharding(plan, 1)]
+    return verify_stage_shardings(plan, shs, {"data": 2, "model": 2})
+
+
+def bad_sharding_free():
+    plan = _good_plan()
+    shs = [_sharding(plan, 0, free=((0, 1),)), _sharding(plan, 1)]
+    return verify_stage_shardings(plan, shs, {"data": 2, "model": 2})
+
+
+CASES = [
+    ("plan-empty", bad_plan_empty),
+    ("plan-pool", bad_plan_pool),
+    ("layer-bounds", bad_layer_bounds),
+    ("layer-amp", bad_layer_amp),
+    ("layer-amp", bad_layer_amp_soft_limit),
+    ("plan-amp", bad_plan_amp),
+    ("pool-exact", bad_pool_exact),
+    ("branch-bounds", bad_branch_bounds),
+    ("branch-overlap", bad_branch_overlap_fg),
+    ("branch-overlap", bad_branch_overlap_pair),
+    ("submesh-fg", bad_submesh_fg),
+    ("submesh-size", bad_submesh_size),
+    ("submesh-stage", bad_submesh_stage),
+    ("submesh-overlap", bad_submesh_overlap),
+    ("submesh-bounds", bad_submesh_bounds),
+    ("submesh-slot0", bad_submesh_slot0),
+    ("serving-bounds", bad_serving_bounds),
+    ("serving-overlap", bad_serving_overlap),
+    ("serving-size", bad_serving_size),
+    ("sharding-count", bad_sharding_count),
+    ("sharding-axis", bad_sharding_axis),
+    ("sharding-free", bad_sharding_free),
+]

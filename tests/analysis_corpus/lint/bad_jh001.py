@@ -1,0 +1,20 @@
+"""Corpus: every JH001 jit-retracing shape the linter must flag."""
+import jax
+
+
+def run_immediate(f, x):
+    # compiled callable discarded after one call
+    return jax.jit(f)(x)
+
+
+def build_all(fns):
+    out = []
+    for f in fns:
+        g = jax.jit(f)  # plain-name bind inside a loop: recompiles each time
+        out.append(g)
+    return out
+
+
+def decode_step(f, x):
+    g = jax.jit(f)  # per-step function body, no attribute/subscript cache
+    return g(x)

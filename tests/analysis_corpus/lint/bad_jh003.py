@@ -1,0 +1,10 @@
+"""Corpus: Python assert over traced jax/jnp values."""
+import jax
+import jax.numpy as jnp
+
+
+def loss(params, x):
+    y = jnp.dot(params, x)
+    assert jnp.all(jnp.isfinite(y)), "non-finite activations"  # flagged
+    assert jax.numpy.sum(y) > 0  # flagged
+    return y

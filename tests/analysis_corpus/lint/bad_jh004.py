@@ -1,0 +1,8 @@
+"""Corpus: PartitionSpec axes outside the {pod, data, model} vocabulary."""
+from jax.sharding import PartitionSpec as P
+
+
+def specs():
+    a = P("data", "modle")          # flagged: typo'd axis
+    b = P(("pod", "replica"), None)  # flagged: unknown axis in a tuple dim
+    return a, b

@@ -1,0 +1,89 @@
+"""Trace schema validator: committed traces are clean, corpus traces are
+flagged with the expected check codes, and round-tripped generator output
+always validates."""
+import json
+import pathlib
+
+import pytest
+
+from repro.analysis.tracecheck import check_paths, check_trace_file
+
+REPO = pathlib.Path(__file__).resolve().parents[1]
+TRACES = REPO / "benchmarks" / "traces"
+CORPUS = pathlib.Path(__file__).parent / "analysis_corpus" / "traces"
+
+
+def test_committed_traces_are_clean():
+    violations = check_paths([str(TRACES)])
+    assert violations == [], "\n".join(str(v) for v in violations)
+
+
+@pytest.mark.parametrize("fname,expected", [
+    ("bad_version.json", {"trace-version"}),
+    ("bad_kind.json", {"trace-event-kind"}),
+    ("bad_device_range.json", {"trace-device-range"}),
+    ("bad_order.json", {"trace-order"}),
+    # lease_churn carrying a device + job_arrival missing its weight
+    ("bad_payload.json", {"trace-field"}),
+    ("bad_requests.json", {"req-top", "req-id", "req-order", "req-row"}),
+])
+def test_corpus_trace_is_flagged(fname, expected):
+    violations = check_trace_file(CORPUS / fname)
+    assert violations, fname
+    codes = {v.check for v in violations}
+    assert codes == expected, (fname, codes)
+
+
+def test_unknown_shape_is_flagged(tmp_path):
+    p = tmp_path / "mystery.json"
+    p.write_text('{"data": []}')
+    assert {v.check for v in check_trace_file(p)} == {"trace-kind"}
+    p.write_text("not json at all {")
+    assert {v.check for v in check_trace_file(p)} == {"trace-json"}
+
+
+def test_generator_output_always_validates(tmp_path):
+    """Whatever the trace generators emit must satisfy the schema — the
+    validator and the generators may never drift apart."""
+    from repro.sim.trace import (
+        generate_failure_storm,
+        generate_heartbeat_loss,
+        generate_lease_churn,
+        generate_trace,
+        save_trace,
+    )
+
+    cases = {
+        "gen.json": generate_trace(16, seed=3, horizon=60.0),
+        "storm.json": generate_failure_storm(16, seed=5),
+        "hb.json": generate_heartbeat_loss(16, seed=7),
+        "lease.json": generate_lease_churn(16, seed=9),
+    }
+    for fname, trace in cases.items():
+        save_trace(trace, tmp_path / fname)
+    violations = check_paths([str(tmp_path)])
+    assert violations == [], "\n".join(str(v) for v in violations)
+
+
+def test_request_trace_generator_validates(tmp_path):
+    from repro.serve.trace import generate_request_trace, save_request_trace
+
+    trace = generate_request_trace(seed=11, qps=5.0, n_requests=20,
+                                   vocab_size=64)
+    p = tmp_path / "reqs.json"
+    save_request_trace(trace, p)
+    violations = check_paths([str(p)])
+    assert violations == [], "\n".join(str(v) for v in violations)
+
+
+def test_mutated_committed_trace_is_caught(tmp_path):
+    """Seed a single-field corruption of a real committed trace — the
+    validator must notice (guards against schema drift that silently
+    accepts everything)."""
+    doc = json.loads((TRACES / "heartbeat_loss_128.json").read_text())
+    ev = next(e for e in doc["events"] if e["kind"] == "heartbeat_loss")
+    ev["device"] = doc["n_devices"]  # one past the pool
+    p = tmp_path / "mutated.json"
+    p.write_text(json.dumps(doc))
+    assert any(v.check == "trace-device-range"
+               for v in check_trace_file(p))

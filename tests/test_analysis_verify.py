@@ -1,0 +1,168 @@
+"""Static plan verifier: clean on everything the real planner emits, and
+every corpus bad example is flagged with its expected check code."""
+import dataclasses
+import importlib.util
+import pathlib
+
+import pytest
+
+from repro.analysis.verify import (
+    PlanVerificationError,
+    verify_carving,
+    verify_plan,
+    verify_plan_or_raise,
+    verify_stage_shardings,
+)
+from repro.configs import TRAIN_4K, get_config
+from repro.configs.vgg16 import CONFIG as VCFG
+from repro.core.coordinator import ClusterCoordinator, Job
+from repro.core.costmodel import A100
+from repro.core.plan import map_plan_to_mesh, serving_plan
+from repro.core.planner import plan, plan_data_parallel
+from repro.models.graph import (
+    build_encdec_graph,
+    build_inception_like_graph,
+    build_lm_graph,
+    build_vgg_graph,
+)
+
+AMP_LIMIT = 2.0
+
+CHAIN_GRAPHS = {
+    "vgg16": lambda: build_vgg_graph(VCFG, 32),
+    "llama3-8b": lambda: build_lm_graph(get_config("llama3-8b"), TRAIN_4K),
+}
+
+
+def _corpus():
+    path = pathlib.Path(__file__).parent / "analysis_corpus" / "bad_plans.py"
+    spec = importlib.util.spec_from_file_location("bad_plans", path)
+    mod = importlib.util.module_from_spec(spec)
+    spec.loader.exec_module(mod)
+    return mod.CASES
+
+
+# -- clean on real planner output -------------------------------------------
+
+
+@pytest.mark.parametrize("arch", sorted(CHAIN_GRAPHS))
+@pytest.mark.parametrize("G", [3, 5, 7, 8, 16])
+def test_chain_plans_verify_clean(arch, G):
+    """Chain plans uphold every invariant including the strict per-layer
+    amp contract, at pow2 and survivor (non-pow2) pool sizes alike."""
+    bp = plan(CHAIN_GRAPHS[arch](), G, amp_limit=AMP_LIMIT, hw=A100)
+    assert verify_plan(bp, pool_size=G, strict_layer_amp=True) == []
+    assert verify_carving(bp, tenants=2) == []
+    assert verify_carving(bp, tenants=3, tenant_quanta=[1, 2, 1]) == []
+
+
+def test_dp_plans_verify_clean():
+    g = CHAIN_GRAPHS["vgg16"]()
+    dp = plan_data_parallel(g, 8, hw=A100)
+    assert verify_plan(dp, pool_size=8) == []
+
+
+def test_inception_dag_verifies_clean():
+    """Block-folding layers carry a whole ParallelBlock's gpu-sec: the
+    folded-layer exemption must keep the strict per-layer check quiet on a
+    DAG plan whose classifier amp is two orders past the limit."""
+    bp = plan(build_inception_like_graph(32, n_blocks=3), 8,
+              amp_limit=AMP_LIMIT, hw=A100)
+    assert any(l.amp > AMP_LIMIT * 1.1 for l in bp.layers)  # the hard case
+    assert verify_plan(bp, pool_size=8, strict_layer_amp=True) == []
+    assert verify_carving(bp, tenants=2) == []
+
+
+def test_encdec_joint_plan_verifies_clean():
+    """The joint enc-dec planner only bounds per-chain aggregates — clean
+    under the default (aggregate-only) contract."""
+    cfg = get_config("seamless-m4t-large-v2").reduced()
+    shape = dataclasses.replace(TRAIN_4K, seq_len=256, global_batch=8,
+                                name="encdec-verify")
+    bp = plan(build_encdec_graph(cfg, shape), 16, amp_limit=AMP_LIMIT,
+              hw=A100)
+    assert verify_plan(bp, pool_size=16) == []
+
+
+def test_serving_plan_verifies_clean():
+    sp = serving_plan(8, 2)
+    assert verify_plan(sp, pool_size=8) == []
+
+
+def test_stage_shardings_verify_clean():
+    bp = plan(CHAIN_GRAPHS["vgg16"](), 8, amp_limit=AMP_LIMIT, hw=A100)
+    axes = {"data": 4, "model": 2}
+    shardings = map_plan_to_mesh(bp, axes)
+    assert verify_stage_shardings(bp, shardings, axes) == []
+
+
+# -- the corpus: every seeded bad example is flagged ------------------------
+
+
+@pytest.mark.parametrize(
+    "expected,thunk", _corpus(),
+    ids=[f"{c}-{t.__name__}" for c, t in _corpus()])
+def test_corpus_case_is_flagged(expected, thunk):
+    violations = thunk()
+    assert violations, f"{thunk.__name__} produced no violations"
+    codes = {v.check for v in violations}
+    assert expected in codes, (thunk.__name__, codes)
+
+
+def test_corpus_covers_every_constructible_check():
+    covered = {c for c, _ in _corpus()}
+    assert covered >= {
+        "plan-empty", "plan-pool", "layer-bounds", "layer-amp", "plan-amp",
+        "pool-exact", "branch-bounds", "branch-overlap",
+        "submesh-fg", "submesh-size", "submesh-stage", "submesh-overlap",
+        "submesh-bounds", "submesh-slot0",
+        "serving-bounds", "serving-overlap", "serving-size",
+        "sharding-count", "sharding-axis", "sharding-free",
+    }
+
+
+# -- the coordinator hook ---------------------------------------------------
+
+
+def test_coordinator_verifies_installed_plans():
+    """Every plan the coordinator installs passes through the verifier; a
+    corrupted plan raises instead of silently burning throughput."""
+    coord = ClusterCoordinator(8)
+    assert coord.verify_plans  # on by default
+    job = Job("fg", "foreground", build_vgg_graph(VCFG, 32),
+              amp_limit=AMP_LIMIT)
+    bp = coord.submit_foreground(job)  # verified on install — no raise
+    assert bp.num_gpus == 8
+
+    bad = dataclasses.replace(bp, num_gpus=3)  # layers now exceed the pool
+    with pytest.raises(PlanVerificationError) as ei:
+        coord._verify_installed(bad, "test")
+    assert any(v.check == "layer-bounds" for v in ei.value.violations)
+
+
+def test_coordinator_verify_env_gate(monkeypatch):
+    monkeypatch.setenv("REPRO_VERIFY_PLANS", "0")
+    assert not ClusterCoordinator(4).verify_plans
+    monkeypatch.delenv("REPRO_VERIFY_PLANS")
+    assert ClusterCoordinator(4).verify_plans
+    # explicit flag beats the environment
+    monkeypatch.setenv("REPRO_VERIFY_PLANS", "0")
+    assert ClusterCoordinator(4, verify_plans=True).verify_plans
+
+
+def test_coordinator_failure_join_cycle_verifies():
+    """The PR 6 elasticity cycle (fail -> replan -> join -> replan) passes
+    the verifier at every installed plan, including the 7-survivor step."""
+    coord = ClusterCoordinator(8)
+    coord.submit_foreground(
+        Job("fg", "foreground", build_vgg_graph(VCFG, 32),
+            amp_limit=AMP_LIMIT))
+    p7 = coord.handle_failure(3)
+    assert p7 is not None and p7.num_gpus == 7  # survivors planned exactly
+    p8 = coord.handle_join([3])
+    assert p8 is not None and p8.num_gpus == 8
+
+
+def test_verify_plan_or_raise_clean_plan_is_silent():
+    bp = plan(CHAIN_GRAPHS["vgg16"](), 8, amp_limit=AMP_LIMIT, hw=A100)
+    verify_plan_or_raise(bp, pool_size=8)  # no raise

@@ -65,7 +65,7 @@ def test_continuous_matches_fixed_batch_greedy(serving_setup):
     reqs = _requests(cfg, 2)
     fixed = ServingEngine(cfg, params, batch=2, capacity=32)
     want = fixed.generate(np.stack([r.prompt for r in reqs]), 5)
-    eng = ContinuousBatchingEngine(cfg, params, lanes=2, n_pages=17,
+    eng = ContinuousBatchingEngine(cfg, params, debug_checks=True, lanes=2, n_pages=17,
                                    page_tokens=4, lane_capacity=16)
     rep = ContinuousScheduler(eng).run(reqs)
     got = np.stack([np.array(r.tokens) for r in
@@ -77,7 +77,7 @@ def test_staggered_arrivals_reuse_lanes_and_pages(serving_setup):
     """More requests than lanes: retired lanes are refilled mid-decode and
     every page returns to the pool afterwards."""
     cfg, _, params = serving_setup
-    eng = ContinuousBatchingEngine(cfg, params, lanes=2, n_pages=9,
+    eng = ContinuousBatchingEngine(cfg, params, debug_checks=True, lanes=2, n_pages=9,
                                    page_tokens=4, lane_capacity=16)
     reqs = _requests(cfg, 5, max_new=4, stagger=1e-4)
     rep = ContinuousScheduler(eng).run(reqs)
@@ -97,7 +97,7 @@ def test_continuous_engine_output_stable_across_lane_assignment(serving_setup):
     cfg, _, params = serving_setup
     outs = []
     for lanes in (2, 3):
-        eng = ContinuousBatchingEngine(cfg, params, lanes=lanes, n_pages=17,
+        eng = ContinuousBatchingEngine(cfg, params, debug_checks=True, lanes=lanes, n_pages=17,
                                        page_tokens=4, lane_capacity=16)
         rep = ContinuousScheduler(eng).run(_requests(cfg, 4, max_new=4))
         outs.append({r.rid: tuple(r.tokens) for r in rep.completed})
@@ -110,7 +110,7 @@ def test_page_pool_exhaustion_defers_never_drops(serving_setup):
     cfg, _, params = serving_setup
     # 4 usable pages; each request needs 3 (6 prompt + 4 new over 4-token
     # pages) -> only one fits at a time
-    eng = ContinuousBatchingEngine(cfg, params, lanes=2, n_pages=5,
+    eng = ContinuousBatchingEngine(cfg, params, debug_checks=True, lanes=2, n_pages=5,
                                    page_tokens=4, lane_capacity=12)
     sched = ContinuousScheduler(eng)
     rep = sched.run(_requests(cfg, 3, max_new=4))
@@ -122,7 +122,7 @@ def test_page_pool_exhaustion_defers_never_drops(serving_setup):
 
 def test_oversize_request_rejected_upfront(serving_setup):
     cfg, _, params = serving_setup
-    eng = ContinuousBatchingEngine(cfg, params, lanes=1, n_pages=5,
+    eng = ContinuousBatchingEngine(cfg, params, debug_checks=True, lanes=1, n_pages=5,
                                    page_tokens=4, lane_capacity=8)
     big = _requests(cfg, 1, plen=7, max_new=8)  # 15 tokens > 8 capacity
     with pytest.raises(ValueError, match="lanes hold"):
@@ -201,10 +201,10 @@ def test_disaggregated_engine_matches_collocated(serving_setup):
 
     cfg, _, params = serving_setup
     sm = split_mesh_for_serving(1, devices=jax.devices()[:2])
-    base = ContinuousBatchingEngine(cfg, params, lanes=2, n_pages=17,
+    base = ContinuousBatchingEngine(cfg, params, debug_checks=True, lanes=2, n_pages=17,
                                     page_tokens=4, lane_capacity=16)
     want = ContinuousScheduler(base).run(_requests(cfg, 3, max_new=4))
-    eng = ContinuousBatchingEngine(cfg, params, lanes=2, n_pages=17,
+    eng = ContinuousBatchingEngine(cfg, params, debug_checks=True, lanes=2, n_pages=17,
                                    page_tokens=4, lane_capacity=16,
                                    submeshes=sm)
     got = ContinuousScheduler(eng).run(_requests(cfg, 3, max_new=4))
@@ -256,7 +256,7 @@ def test_scheduler_admission_defers_but_completes(serving_setup):
     """An admission sweep that only allows one concurrent request still
     serves the whole trace (deferred, not dropped)."""
     cfg, _, params = serving_setup
-    eng = ContinuousBatchingEngine(cfg, params, lanes=3, n_pages=17,
+    eng = ContinuousBatchingEngine(cfg, params, debug_checks=True, lanes=3, n_pages=17,
                                    page_tokens=4, lane_capacity=16)
     adm = ServingAdmission(
         8, 4, prefill_time=10e-3, decode_step_time=1e-3,
